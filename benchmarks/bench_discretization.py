@@ -1,0 +1,67 @@
+"""TPU adaptation cost: PM fluid optimum vs discretized device-group plan.
+
+Not a paper table — it quantifies the one assumption we had to change
+(fractional shares → power-of-two sub-meshes, DESIGN.md §7): the plan /
+fluid makespan ratio on real elimination trees, plus the elastic-replan
+overhead for a mid-run capacity loss.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import random_assembly_tree
+from repro.runtime import ElasticEvent, run_elastic_schedule
+from repro.sparse import (
+    analyze,
+    grid_laplacian_2d,
+    make_plan,
+    nested_dissection_2d,
+    permute_symmetric,
+)
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    rng = np.random.default_rng(3)
+    trees = []
+    for g in (23, 35, 47):
+        a = grid_laplacian_2d(g, g)
+        ap = permute_symmetric(a, nested_dissection_2d(g, g))
+        trees.append((f"grid{g}x{g}", analyze(ap, relax=2).task_tree()))
+    trees.append(("rand2000", random_assembly_tree(2000, rng)))
+
+    for name, tree in trees:
+        for ndev in (64, 256):
+            t0 = time.time()
+            plan = make_plan(tree, ndev, alpha=0.9)
+            us = (time.time() - t0) * 1e6
+            rows.append({
+                "name": f"discretize_{name}_d{ndev}",
+                "us_per_call": round(us, 1),
+                "derived": f"efficiency={plan.efficiency():.3f}"
+                           f" fluid={plan.fluid_makespan:.3g}"
+                           f" plan={plan.makespan:.3g}",
+            })
+
+    # elastic: lose half the mesh at 40% progress
+    name, tree = trees[1]
+    plan = make_plan(tree, 256, alpha=0.9)
+    t0 = time.time()
+    mk, plans = run_elastic_schedule(
+        tree, 0.9, 256, [ElasticEvent(plan.makespan * 0.4, 128)]
+    )
+    rows.append({
+        "name": f"elastic_{name}",
+        "us_per_call": round((time.time() - t0) * 1e6, 1),
+        "derived": f"mk_nofail={plan.makespan:.3g} mk_fail={mk:.3g}"
+                   f" overhead={mk / plan.makespan:.3f} replans={len(plans)}",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

@@ -1,0 +1,57 @@
+"""Beyond-paper: PM-guided MoE expert allocation.
+
+Routed experts under a skewed router are independent malleable tasks
+(lengths = expected token load × per-token flops).  Compare the projected
+layer latency of (a) uniform expert placement, (b) PM-share placement via
+the k-node greedy, (c) the two-pod FPTAS split — the same §6 machinery the
+paper builds, applied to a modern serving problem.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import k_node_greedy, star_tree
+from repro.core.hetero import hetero_fptas
+
+
+def run() -> List[Dict]:
+    rng = np.random.default_rng(13)
+    rows: List[Dict] = []
+    e, k_nodes, alpha = 60, 8, 0.9
+    for skew in (0.0, 1.0, 2.0):
+        # zipf-ish router load
+        load = (np.arange(1, e + 1) ** (-skew)) if skew else np.ones(e)
+        load = load / load.sum()
+        lengths = load * 1e6  # flops-ish units
+
+        # (a) uniform: experts round-robin over nodes, node time = Σ loads/node^α
+        per_node = np.zeros(k_nodes)
+        for i, l in enumerate(lengths):
+            per_node[i % k_nodes] += l
+        uniform = per_node.max()  # 1 node-share each
+
+        # (b) PM greedy placement
+        t0 = time.time()
+        res = k_node_greedy(star_tree(lengths), alpha, 1.0, k_nodes)
+        us = (time.time() - t0) * 1e6
+        pm = max(res.node_eq) if res.node_eq else res.makespan
+
+        # (c) two-pod FPTAS (4+4 nodes)
+        res2 = hetero_fptas(lengths, 4.0, 4.0, alpha, lam=1.05)
+
+        rows.append({
+            "name": f"moe_pm_skew{skew}",
+            "us_per_call": round(us, 1),
+            "derived": f"uniform={uniform:.3g} pm={pm:.3g}"
+                       f" gain={100*(uniform/pm-1):.1f}%"
+                       f" fptas_mk={res2.makespan:.3g}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

@@ -1,0 +1,89 @@
+"""§7 simulation campaign: PM vs DIVISIBLE vs PROPORTIONAL (Figures 13/14).
+
+The paper runs >600 UF-collection assembly trees at p ∈ {40, 100} and
+α ∈ [0.5, 1.0], reporting the % relative distance to the PM makespan
+(median/quartiles/deciles).  Offline we use the same two tree families the
+collection spans: real elimination trees of grid Laplacians (via this
+repo's symbolic analysis) and synthetic assembly-like trees.  The paper's
+headline numbers to compare against: at α=0.9, p=40 the median DIVISIBLE
+distance ≈ 16 % and PROPORTIONAL ≈ 3 %; distances grow as α drops and with
+p=100.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (
+    TaskTree,
+    aggregate,
+    pm_makespan_constant_p,
+    random_assembly_tree,
+    strategies_comparison,
+)
+from repro.sparse import (
+    analyze,
+    grid_laplacian_2d,
+    nested_dissection_2d,
+    permute_symmetric,
+)
+
+ALPHAS = [0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 1.0]
+PROCS = [40, 100]
+
+
+def tree_set(n_random: int = 40, seed: int = 0) -> List[TaskTree]:
+    rng = np.random.default_rng(seed)
+    trees: List[TaskTree] = []
+    for g in (19, 27, 35, 43):
+        a = grid_laplacian_2d(g, g)
+        ap = permute_symmetric(a, nested_dissection_2d(g, g))
+        trees.append(analyze(ap, relax=2).task_tree())
+    for _ in range(n_random):
+        n = int(rng.integers(300, 4000))
+        trees.append(random_assembly_tree(n, rng))
+    return trees
+
+
+def run(trees=None) -> List[Dict]:
+    trees = trees or tree_set()
+    rows = []
+    # §7 pre-pass: PM runs on the aggregated tree (no task below 1 proc) —
+    # this is what makes the p = 40 vs p = 100 distances differ, exactly as
+    # in the paper.  DIVISIBLE/PROPORTIONAL are evaluated on the raw tree
+    # with the sub-unit linear-speedup floor.
+    agg_cache = {}
+    for p in PROCS:
+        for alpha in ALPHAS:
+            d_div, d_prop = [], []
+            t0 = time.time()
+            for ti, t in enumerate(trees):
+                key = (ti, p, alpha)
+                if key not in agg_cache:
+                    agg_cache[key] = aggregate(t.to_sp(), alpha, float(p))
+                m_pm = pm_makespan_constant_p(agg_cache[key], alpha, float(p))
+                _, m_prop, m_div = strategies_comparison(t, alpha, float(p))
+                d_div.append(100.0 * (m_div / m_pm - 1.0))
+                d_prop.append(100.0 * (m_prop / m_pm - 1.0))
+            us = (time.time() - t0) / len(trees) * 1e6
+            rows.append(
+                {
+                    "name": f"sim_p{p}_a{alpha}",
+                    "us_per_call": round(us, 1),
+                    "derived": (
+                        f"div_med={np.median(d_div):.1f}%"
+                        f" div_q1={np.percentile(d_div, 25):.1f}%"
+                        f" div_q3={np.percentile(d_div, 75):.1f}%"
+                        f" prop_med={np.median(d_prop):.1f}%"
+                        f" prop_q3={np.percentile(d_prop, 75):.1f}%"
+                    ),
+                }
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

@@ -1,0 +1,78 @@
+"""§6.1 quality: Algorithm 11 vs brute force / lower bounds (Theorem 8).
+
+No table in the paper reports empirical ratios (only the (4/3)^α proof);
+this benchmark quantifies the real gap on random trees and independent-task
+instances, and checks the NP-hardness PARTITION gadget.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (
+    hetero_exact,
+    homogeneous_two_node,
+    random_assembly_tree,
+    star_tree,
+    two_node_lower_bound,
+)
+
+
+def run() -> List[Dict]:
+    rng = np.random.default_rng(7)
+    rows: List[Dict] = []
+
+    for alpha in (0.7, 0.9):
+        # trees vs (Lemma 15–style) lower bound
+        ratios = []
+        t0 = time.time()
+        for _ in range(50):
+            t = random_assembly_tree(int(rng.integers(20, 300)), rng)
+            res = homogeneous_two_node(t, alpha, 32.0)
+            lb = max(two_node_lower_bound(t, alpha, 32.0), 1e-12)
+            ratios.append(res.makespan / lb)
+        us = (time.time() - t0) / 50 * 1e6
+        rows.append({
+            "name": f"alg11_trees_a{alpha}",
+            "us_per_call": round(us, 1),
+            "derived": f"vs_loose_LB_med={np.median(ratios):.3f}"
+                       f" max={np.max(ratios):.3f}"
+                       f" proof_bound_vs_OPT={(4/3)**alpha:.3f}",
+        })
+
+        # independent tasks vs exact optimum
+        ratios = []
+        t0 = time.time()
+        for _ in range(30):
+            lens = rng.uniform(0.5, 20.0, size=int(rng.integers(4, 12)))
+            res = homogeneous_two_node(star_tree(lens), alpha, 16.0)
+            opt, _ = hetero_exact(lens, 16.0, 16.0, alpha)
+            ratios.append(res.makespan / opt)
+        us = (time.time() - t0) / 30 * 1e6
+        rows.append({
+            "name": f"alg11_indep_a{alpha}",
+            "us_per_call": round(us, 1),
+            "derived": f"ratio_med={np.median(ratios):.4f}"
+                       f" ratio_max={np.max(ratios):.4f}"
+                       f" bound={(4/3)**alpha:.3f}",
+        })
+
+    # Theorem 7 gadget: L_i = a_i^α, perfect partition exists
+    alpha = 0.8
+    a = np.array([5.0, 3.0, 4.0, 2.0, 4.0, 6.0])  # Σ=24, perfect 12/12
+    res = homogeneous_two_node(star_tree(a**alpha), alpha, 12.0)
+    opt, _ = hetero_exact(list(a**alpha), 12.0, 12.0, alpha)
+    rows.append({
+        "name": "theorem7_gadget",
+        "us_per_call": 0.0,
+        "derived": f"alg={res.makespan:.4f} opt={opt:.4f}"
+                   f" ratio={res.makespan/opt:.4f}",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

@@ -1,0 +1,45 @@
+"""Render the roofline table (EXPERIMENTS.md SS Dry-run / Roofline) from the
+dry-run JSON artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(results_dir="results/dryrun", multi_pod=False):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        d = json.load(open(f))
+        if d.get("multi_pod") != multi_pod:
+            continue
+        rows.append(d)
+    return rows
+
+
+def fmt(results_dir="results/dryrun", multi_pod=False):
+    rows = load(results_dir, multi_pod)
+    out = []
+    hdr = (f"{'arch':22s} {'shape':12s} {'st':4s} {'t_comp(s)':>10s} "
+           f"{'t_mem(s)':>10s} {'t_coll(s)':>10s} {'bound':>6s} "
+           f"{'M/H':>5s} {'peak(GB)':>9s} {'tpuGB':>6s}")
+    out.append(hdr)
+    out.append("-" * len(hdr))
+    for d in rows:
+        if d["status"] != "ok":
+            out.append(f"{d['arch']:22s} {d['shape']:12s} SKIP  ({d.get('reason','')[:60]})")
+            continue
+        bound = d["bottleneck"].replace("t_", "")[:6]
+        out.append(
+            f"{d['arch']:22s} {d['shape']:12s} ok   {d['t_compute']:10.4f} "
+            f"{d['t_memory']:10.3f} {d['t_collective']:10.3f} {bound:>6s} "
+            f"{d['model_hlo_ratio']:5.2f} {d['peak_bytes']/1e9:9.2f} "
+            f"{d['peak_bytes_tpu_est']/1e9:6.2f}"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mp = "--multi-pod" in sys.argv
+    print(fmt(multi_pod=mp))

@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure (+ system benches).
+
+Prints ``name,us_per_call,derived`` CSV.  The roofline table itself comes
+from the dry-run artifacts (results/dryrun) and is summarized by
+``python -m benchmarks.roofline_table``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (
+        bench_alpha_calibration,
+        bench_discretization,
+        bench_fptas,
+        bench_kernel,
+        bench_moe_pm,
+        bench_simulations,
+        bench_two_node,
+    )
+
+    modules = [
+        ("alpha_calibration (S3, Tables 1-2)", bench_alpha_calibration),
+        ("simulations (S7, Figures 13-14)", bench_simulations),
+        ("two_node (S6.1, Theorem 8)", bench_two_node),
+        ("fptas (S6.2, Corollary 19)", bench_fptas),
+        ("discretization (DESIGN S7 adaptation)", bench_discretization),
+        ("kernel (frontal Pallas)", bench_kernel),
+        ("moe_pm (beyond-paper)", bench_moe_pm),
+    ]
+    print("name,us_per_call,derived")
+    for title, mod in modules:
+        print(f"# --- {title}", file=sys.stderr)
+        for r in mod.run():
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

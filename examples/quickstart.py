@@ -1,0 +1,74 @@
+"""Quickstart: the paper in five minutes on one CPU.
+
+1. Schedule a tree of malleable tasks with the PM optimal allocation and
+   compare against the speedup-unaware baselines (§5/§7).
+2. Factor a sparse SPD matrix with the PM-planned multifrontal method and
+   the Pallas frontal kernel (§3's application).
+3. Survive a capacity loss mid-plan (the paper's p(t) as fault tolerance).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    Profile,
+    from_pm,
+    random_assembly_tree,
+    strategies_comparison,
+    tree_equivalent_lengths,
+)
+from repro.kernels.ops import factor_fn
+from repro.runtime import ElasticEvent, run_elastic_schedule
+from repro.sparse import (
+    analyze,
+    factorize,
+    grid_laplacian_2d,
+    make_plan,
+    nested_dissection_2d,
+    permute_symmetric,
+)
+
+ALPHA = 0.9  # the paper's measured range on its platform: 0.85–0.95
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+
+    print("=== 1. PM optimal schedule vs baselines (p = 40) ===")
+    tree = random_assembly_tree(500, rng)
+    m_pm, m_prop, m_div = strategies_comparison(tree, ALPHA, 40.0)
+    print(f"PM (optimal)     : {m_pm:10.2f}")
+    print(f"PROPORTIONAL     : {m_prop:10.2f}  (+{100*(m_prop/m_pm-1):.1f}%)")
+    print(f"DIVISIBLE        : {m_div:10.2f}  (+{100*(m_div/m_pm-1):.1f}%)")
+    sched = from_pm(tree, ALPHA, Profile.constant(40.0))
+    sched.validate(tree, Profile.constant(40.0))
+    print("PM schedule validated against the §4 conditions.\n")
+
+    print("=== 2. PM-planned multifrontal Cholesky (Pallas kernel) ===")
+    a = grid_laplacian_2d(21, 21)
+    ap = permute_symmetric(a, nested_dissection_2d(21, 21))
+    symb = analyze(ap, relax=2)
+    ttree = symb.task_tree()
+    plan = make_plan(ttree, 64, alpha=ALPHA)
+    print(f"{symb.n_supernodes} fronts; plan efficiency vs fluid optimum: "
+          f"{plan.efficiency():.2%}")
+    order = [t.label for w in plan.waves() for t in w if t.label >= 0]
+    fact = factorize(ap, symb, factor_fn=factor_fn(), order=order)
+    l = fact.to_dense_l()
+    err = np.abs(l @ l.T - ap.toarray()).max()
+    print(f"||LLᵀ − A||_inf = {err:.2e}\n")
+
+    print("=== 3. Elastic: lose half the mesh at 40% progress ===")
+    mk, plans = run_elastic_schedule(
+        ttree, ALPHA, 64, [ElasticEvent(plan.makespan * 0.4, 32)]
+    )
+    eq = tree_equivalent_lengths(ttree, ALPHA)[ttree.root]
+    fluid = Profile.of([(plan.makespan * 0.4, 64.0), (np.inf, 32.0)])
+    print(f"no-failure makespan : {plan.makespan:10.3g}")
+    print(f"with failure        : {mk:10.3g} ({len(plans)} plans)")
+    print(f"fluid lower bound   : {fluid.time_for_work(eq, ALPHA):10.3g}")
+    print("ratios survive the capacity step (Lemma 4) — only shares rescale.")
+
+
+if __name__ == "__main__":
+    main()

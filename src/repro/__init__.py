@@ -1,0 +1,16 @@
+"""repro — "Scheduling Trees of Malleable Tasks for Sparse Linear Algebra"
+(Guermouche, Marchal, Simon, Vivien; INRIA RR-8616, 2014) as a multi-pod
+JAX framework.
+
+Sub-packages:
+  core         the paper: PM optimal schedule, Alg 11, Alg 12, baselines, §7
+  sparse       multifrontal Cholesky (the paper's application) + PM planning
+  kernels      Pallas TPU kernels (frontal partial Cholesky, flash attention)
+  models       the 10 assigned architectures (train/prefill/decode)
+  configs      exact public-literature configs (+ the solver's own)
+  distributed  sharding rules and mesh-agnostic constraints
+  train/serve/data/checkpoint/runtime   production substrate
+  launch       meshes, multi-pod dry-run, HLO cost model, launchers
+"""
+
+__version__ = "1.0.0"

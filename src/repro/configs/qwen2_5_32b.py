@@ -1,0 +1,17 @@
+"""qwen2.5-32b [dense] — GQA, QKV bias.  40 heads padded to 48 for TP=16
+(inert heads).  [hf:Qwen/Qwen2.5-0.5B; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=27_648,
+    vocab_size=152_064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen2.5-0.5B family (assignment dims)",
+)

@@ -1,0 +1,102 @@
+"""Two heterogeneous nodes: the (p,q)-SCHEDULING FPTAS (§6.2, Algorithm 12).
+
+n independent malleable tasks, nodes of p and q processors, same α.  With
+``x_i = L_i^{1/α}`` the makespan of a partition (A on the p-part) is
+``max((Σ_A x_i / p)^α, (Σ_Ā x_i / q)^α)``, so the problem reduces to
+subset-sum around the ideal split ``p·S/(p+q)``.  Algorithm 12 runs a
+subset-sum AS twice (targets pS/(p+q) and qS/(p+q)) with accuracy
+``ε_κ = (λ^{1/α} − 1)/r``, r = max(p/q, q/p), and returns the better of the
+two induced schedules; Theorem 18 proves the result is a λ-approximation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .subset_sum import subset_sum_exact, subset_sum_fptas
+
+
+@dataclass
+class HeteroResult:
+    makespan: float
+    on_p: List[int]  # indices of tasks on the p-part
+    on_q: List[int]
+    lam: float  # requested approximation ratio
+    lower_bound: float  # M_ideal = (S/(p+q))^α
+
+
+def partition_makespan(
+    lengths: Sequence[float], on_p: Sequence[int], p: float, q: float, alpha: float
+) -> float:
+    xs = np.asarray(lengths, dtype=np.float64) ** (1.0 / alpha)
+    sel = np.zeros(len(xs), dtype=bool)
+    sel[list(on_p)] = True
+    sp = max(float(xs[sel].sum()), 0.0)
+    sq = max(float(xs[~sel].sum()), 0.0)
+    return max((sp / p) ** alpha, (sq / q) ** alpha)
+
+
+def hetero_fptas(
+    lengths: Sequence[float], p: float, q: float, alpha: float, lam: float
+) -> HeteroResult:
+    """Algorithm 12 (HeterogeneousApp)."""
+    if lam <= 1:
+        raise ValueError("lambda must exceed 1")
+    n = len(lengths)
+    xs = [float(L) ** (1.0 / alpha) for L in lengths]
+    S = sum(xs)
+    r = max(p / q, q / p)
+    m_ideal = (S / (p + q)) ** alpha
+
+    if lam >= (1.0 + r) ** alpha:
+        # PM on the largest part alone is already a λ-approximation
+        big_is_p = p >= q
+        on_p = list(range(n)) if big_is_p else []
+        on_q = [] if big_is_p else list(range(n))
+        mk = (S / max(p, q)) ** alpha
+        return HeteroResult(mk, on_p, on_q, lam, m_ideal)
+
+    eps_k = (lam ** (1.0 / alpha) - 1.0) / r
+    # run the AS on both targets (both branches of inequality (1))
+    _, a_idx = subset_sum_fptas(xs, p * S / (p + q), eps_k)
+    _, b_idx = subset_sum_fptas(xs, q * S / (p + q), eps_k)
+
+    cand_a = a_idx  # A on p-part
+    cand_b = [i for i in range(n) if i not in set(b_idx)]  # B on q-part ⇒ B̄ on p-part
+    mk_a = partition_makespan(lengths, cand_a, p, q, alpha)
+    mk_b = partition_makespan(lengths, cand_b, p, q, alpha)
+    if mk_a <= mk_b:
+        chosen = cand_a
+        mk = mk_a
+    else:
+        chosen = cand_b
+        mk = mk_b
+    on_q = [i for i in range(n) if i not in set(chosen)]
+    return HeteroResult(mk, sorted(chosen), on_q, lam, m_ideal)
+
+
+def hetero_exact(
+    lengths: Sequence[float], p: float, q: float, alpha: float
+) -> Tuple[float, List[int]]:
+    """Brute-force optimum over the 2^n partitions (test oracle, n ≤ 22)."""
+    n = len(lengths)
+    if n > 22:
+        raise ValueError("exact limited to n <= 22")
+    xs = np.asarray(lengths, dtype=np.float64) ** (1.0 / alpha)
+    S = float(xs.sum())
+    best, best_mask = np.inf, 0
+    for mask in range(1 << n):
+        sp = 0.0
+        m, i = mask, 0
+        while m:
+            if m & 1:
+                sp += xs[i]
+            m >>= 1
+            i += 1
+        sq = max(S - sp, 0.0)  # guard float-accumulation underflow
+        mk = max((sp / p) ** alpha, (sq / q) ** alpha)
+        if mk < best:
+            best, best_mask = mk, mask
+    return float(best), [i for i in range(n) if best_mask >> i & 1]

@@ -1,0 +1,86 @@
+"""Tree generators for the §7-style simulation campaign.
+
+The paper evaluates on >600 assembly trees of sparse matrices from the
+University of Florida collection (2k–1e6 nodes, depth 12–75k).  The
+collection is not available offline, so we use two sources with the same
+statistics family:
+
+* ``elimination_tree_of_grid`` — *real* assembly trees produced by this
+  repo's own symbolic multifrontal analysis of 2D/3D grid Laplacians
+  (see repro.sparse); these are the exact object the paper schedules.
+* ``random_assembly_tree`` — synthetic trees matching the qualitative shape
+  of assembly trees: many small leaves, heavy near-root tasks (task length
+  grows with subtree size, like frontal flops ~ (front size)^3), long chains.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import TaskTree
+
+
+def random_assembly_tree(
+    n: int,
+    rng: np.random.Generator,
+    chain_fraction: float = 0.3,
+    length_exponent: float = 1.5,
+) -> TaskTree:
+    """Random in-tree with assembly-tree-like length distribution.
+
+    Construction: nodes 0..n-1; node i attaches to a random earlier node,
+    biased toward recent nodes to create chains (probability
+    ``chain_fraction`` of attaching to i-1).  Task lengths grow with the
+    number of descendants^``length_exponent`` — mimicking frontal
+    factorization flops that grow polynomially with front order — times a
+    lognormal jitter.
+    """
+    if n < 1:
+        raise ValueError("n >= 1")
+    parent = np.full(n, -1, dtype=np.int64)
+    # build top-down: node 0 is the root; i >= 1 attaches to some j < i
+    for i in range(1, n):
+        if rng.random() < chain_fraction:
+            parent[i] = i - 1
+        else:
+            parent[i] = int(rng.integers(0, i))
+    # subtree sizes
+    size = np.ones(n, dtype=np.int64)
+    for i in range(n - 1, 0, -1):
+        size[parent[i]] += size[i]
+    jitter = rng.lognormal(mean=0.0, sigma=0.5, size=n)
+    lengths = (size.astype(np.float64) ** length_exponent) * jitter
+    lengths = lengths / lengths.sum() * n  # normalize total work ~ n
+    return TaskTree(parent=parent, lengths=lengths)
+
+
+def balanced_tree(depth: int, arity: int, leaf_length: float = 1.0, inner_growth: float = 2.0) -> TaskTree:
+    """Perfect ``arity``-ary tree; task length multiplies by inner_growth per
+    level toward the root (roughly nested-dissection-like)."""
+    parents = [-1]
+    lengths = [leaf_length * inner_growth**depth]
+    frontier = [0]
+    for d in range(depth):
+        new_frontier = []
+        for f in frontier:
+            for _ in range(arity):
+                parents.append(f)
+                lengths.append(leaf_length * inner_growth ** (depth - d - 1))
+                new_frontier.append(len(parents) - 1)
+        frontier = new_frontier
+    return TaskTree(parent=np.array(parents), lengths=np.array(lengths))
+
+
+def chain_tree(n: int, lengths=None) -> TaskTree:
+    """Pure chain (series composition) — PM degenerates to whole-machine."""
+    parent = np.arange(-1, n - 1, dtype=np.int64)
+    if lengths is None:
+        lengths = np.ones(n)
+    return TaskTree(parent=parent, lengths=np.asarray(lengths, dtype=np.float64))
+
+
+def star_tree(lengths) -> TaskTree:
+    """Zero-length root over independent tasks (the §6 instances as a tree)."""
+    lengths = np.asarray(lengths, dtype=np.float64)
+    n = len(lengths)
+    parent = np.concatenate([[-1], np.zeros(n, dtype=np.int64)])
+    return TaskTree(parent=parent, lengths=np.concatenate([[0.0], lengths]))

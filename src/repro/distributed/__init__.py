@@ -1,0 +1,11 @@
+from .constraints import active_mesh, constrain, set_active_mesh, shard_model, shard_over_dp
+from .sharding import (
+    activation_pspec,
+    batch_pspecs,
+    cache_pspecs,
+    dp_axes,
+    named,
+    param_pspecs,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,82 @@
+"""Mesh-agnostic sharding constraints for model code.
+
+Model code calls ``shard_over_dp(x)`` / ``constrain(x, ...)`` at tensors
+where XLA's propagation is known to give up (MoE dispatch, post-embedding
+activations).  The launcher installs the mesh with ``active_mesh(mesh)``
+(jax 0.8's ``with mesh:`` does not expose an abstract mesh to tracing);
+without an installed mesh the helpers are no-ops, so CPU smoke tests and
+unit tests run the very same model code unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Sequence[str]]
+
+_STATE = threading.local()
+
+
+def set_active_mesh(mesh: Optional[Mesh]) -> None:
+    _STATE.mesh = mesh
+
+
+def get_active_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def active_mesh(mesh: Mesh):
+    prev = get_active_mesh()
+    set_active_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_active_mesh(prev)
+
+
+def _filter_axis(axis: Axis, names) -> Axis:
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in names else None
+    present = tuple(a for a in axis if a in names)
+    return present if present else None
+
+
+def constrain(x: jax.Array, *spec: Axis) -> jax.Array:
+    """with_sharding_constraint if a mesh is installed and dims divide."""
+    mesh = get_active_mesh()
+    if mesh is None:
+        return x
+    names = mesh.axis_names
+    sizes = dict(mesh.shape)
+    dims = []
+    for i, ax in enumerate(spec):
+        ax = _filter_axis(ax, names)
+        if ax is not None:
+            total = 1
+            for a in (ax,) if isinstance(ax, str) else ax:
+                total *= sizes[a]
+            if x.shape[i] % total != 0 or x.shape[i] < total:
+                ax = None
+        dims.append(ax)
+    dims += [None] * (x.ndim - len(dims))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*dims)))
+
+
+def shard_over_dp(x: jax.Array, dim: int = 0) -> jax.Array:
+    """Pin ``dim`` to the data-parallel axes (pod+data)."""
+    spec: list = [None] * x.ndim
+    spec[dim] = ("pod", "data")
+    return constrain(x, *spec)
+
+
+def shard_model(x: jax.Array, dim: int) -> jax.Array:
+    spec: list = [None] * x.ndim
+    spec[dim] = "model"
+    return constrain(x, *spec)

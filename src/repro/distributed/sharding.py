@@ -1,0 +1,147 @@
+"""Named-sharding rules: parameter / batch / cache PartitionSpecs.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  The pod axis only ever carries data parallelism (a front/task
+never spans pods — the paper's 𝓡 constraint mapped to the ICI/DCN
+boundary), so DP axes are ``("pod", "data")`` when the pod axis exists.
+
+Parameter rules are path-based over the leaf names of the model pytrees;
+stacked per-layer tensors get a leading None for the layer axis
+automatically (specs are right-aligned to the array rank).
+
+Decode-cache policy (a §Perf lever, see DESIGN.md):
+  * kv_heads ≥ TP degree  → shard cache heads on "model"
+  * kv_heads < TP degree  → shard cache *sequence* on "model"
+    (flash-decoding style: XLA inserts the partial-softmax combine)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeCell
+
+PyTree = Any
+
+# leaf-name → spec of the *trailing* dims (right-aligned; leading dims None)
+_COL = ("wq", "wk", "wv", "w_gate", "w_up", "shared_gate", "shared_up",
+        "cm_k", "w_r", "w_k", "w_v", "w_g", "w_z", "w_x")
+_ROW = ("wo", "w_down", "shared_down", "cm_v", "w_o", "w_out")
+_REP2 = ("router", "w_b", "w_c", "w_dt", "w_lora_a", "w_lora_b",
+         "frontend_proj", "conv_w", "cm_r")
+_BIAS_COL = ("bq", "bk", "bv", "b_up")
+
+
+def _leaf_spec(path: Tuple[str, ...], ndim: int, moe_sharding: str = "tp") -> P:
+    name = path[-1]
+    in_moe = "moe" in path
+    if name == "embed":
+        tail = ("model", None)
+    elif name == "lm_head":
+        tail = (None, "model")
+    elif in_moe and name in ("w_gate", "w_up", "w_down") and moe_sharding == "ep":
+        tail = ("model", None, None)  # (E, D, F): expert parallelism
+    elif in_moe and name in ("w_gate", "w_up"):
+        tail = (None, None, "model")  # (E, D, F): TP on the expert hidden
+    elif in_moe and name == "w_down":
+        tail = (None, "model", None)
+    elif name in _COL:
+        tail = (None, "model")
+    elif name in _ROW:
+        tail = ("model", None)
+    elif name in _REP2:
+        tail = tuple(None for _ in range(min(ndim, 2)))
+    elif name in _BIAS_COL:
+        tail = ("model",)
+    else:  # norms, scalars, small vectors: replicated
+        tail = ()
+    tail = tail[:ndim]
+    return P(*([None] * (ndim - len(tail)) + list(tail)))
+
+
+def _key_str(k) -> str:
+    return getattr(k, "key", getattr(k, "name", str(k)))
+
+
+def param_pspecs(cfg: ModelConfig, params_shape: PyTree) -> PyTree:
+    """PartitionSpec pytree matching a params(-shape) pytree."""
+
+    def spec(path, leaf):
+        names = tuple(_key_str(p) for p in path)
+        nd = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+        return _leaf_spec(names, nd, cfg.moe_sharding)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+# ----------------------------------------------------------------------
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    b = shape.global_batch
+    bspec = dp if b % max(_dp_size(mesh), 1) == 0 and b >= _dp_size(mesh) else None
+    specs = {"tokens": P(bspec, None)}
+    if cfg.family == "vlm":
+        specs["patches"] = P(bspec, None, None)
+    if cfg.family == "audio":
+        specs["frames"] = P(bspec, None, None)
+    return specs
+
+
+def cache_pspecs(
+    cfg: ModelConfig, shape: ShapeCell, mesh: Mesh, cache_shapes: Dict[str, Any]
+) -> Dict[str, P]:
+    """Specs for the decode cache pytree (see module docstring policy)."""
+    dp = dp_axes(mesh)
+    b = shape.global_batch
+    bspec: Optional[Tuple[str, ...]] = (
+        dp if b % max(_dp_size(mesh), 1) == 0 and b >= _dp_size(mesh) else None
+    )
+    tp = mesh.shape.get("model", 1)
+    heads_shard = cfg.n_kv_heads % tp == 0 and cfg.n_kv_heads >= tp
+
+    out: Dict[str, P] = {}
+    for name, leaf in cache_shapes.items():
+        nd = leaf.ndim if hasattr(leaf, "ndim") else np.ndim(leaf)
+        if name in ("k", "v", "xk", "xv", "ak", "av"):
+            # (L|G, B, S, Hkv, Dh)
+            if heads_shard:
+                out[name] = P(None, bspec, None, "model", None)
+            else:
+                out[name] = P(None, bspec, "model", None, None)
+        elif name == "s" and nd == 5:  # (L, B, H, dk, dv)
+            h = leaf.shape[2]
+            hspec = "model" if h % tp == 0 else None
+            out[name] = P(None, bspec, hspec, None, None)
+        elif name in ("tm_last", "cm_last"):  # (L, B, D)
+            out[name] = P(None, bspec, "model")
+        elif name == "conv":  # (L, B, K-1, C)
+            c = leaf.shape[-1]
+            out[name] = P(None, bspec, None, "model" if c % tp == 0 else None)
+        else:  # pos, src_len scalars
+            out[name] = P()
+    return out
+
+
+# ----------------------------------------------------------------------
+def named(mesh: Mesh, tree_of_pspecs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_of_pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def activation_pspec(mesh: Mesh) -> P:
+    """(B, T, D) activations: batch over DP axes, D replicated."""
+    return P(dp_axes(mesh), None, None)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot spots (+ pure-jnp oracles).
+
+frontal_cholesky   blocked partial Cholesky of a frontal matrix — the
+                   paper's §3 task interior, TPU-native (VMEM-resident and
+                   panel+SYRK paths)
+flash_attention    online-softmax attention (§Perf-3)
+ops                jitted public wrappers (padding, path selection)
+ref                jnp oracles the kernels are allclose-tested against
+"""
+from .frontal_cholesky import front_factor_vmem, panel_factor, syrk_downdate
+from .ops import factor_fn, partial_cholesky
+from .ref import panel_factor_ref, partial_cholesky_ref, syrk_update_ref
+
+__all__ = [k for k in dir() if not k.startswith("_")]

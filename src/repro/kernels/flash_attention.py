@@ -1,0 +1,124 @@
+"""Pallas TPU flash attention (forward): online-softmax, logits never
+leave VMEM.
+
+This is the §Perf fix for the dense-train cells: the XLA-level blocked
+attention materializes (Bq × Bkv) logit tiles in HBM every scan step —
+the single largest slice of their memory roofline term.  The kernel keeps
+the running (max, sum, acc) in VMEM scratch across the kv-block grid
+dimension (TPU grid iterates sequentially, output blocks are revisited),
+exactly like the frontal kernel keeps the panel resident (the paper's §3
+tiling insight applied to the attention task).
+
+Grid: (B·H, nq, nkv), kv innermost.  Causal masking per tile; fully-masked
+tiles are skipped with pl.when (they still occupy grid steps — the ~2×
+flop skip is a further lever, cf. splash's triangle packing).
+
+Backward note: the matching dKV/dQ kernels follow the same structure
+(standard splash-attention bwd); system-level projections in
+EXPERIMENTS.md §Perf account fwd+bwd streams analytically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, bq: int, bkv: int, nkv: int, causal: bool, scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = i * bq
+    kv_start = j * bkv
+    # skip fully-future tiles (causal): kv block begins after q block ends
+    run = (not causal) or (kv_start <= q_start + bq - 1)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)  # (bkv, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bq, bkv)
+        if causal:
+            qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            ki = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(ki <= qi, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == nkv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, T, H, Dh)
+    k: jax.Array,  # (B, T, H, Dh) — pre-repeated to the q head count
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = 256,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, t, h, dh = q.shape
+    bq = min(block_q, t)
+    bkv = min(block_kv, t)
+    assert t % bq == 0 and t % bkv == 0, (t, bq, bkv)
+    nq, nkv = t // bq, t // bkv
+    scale = dh**-0.5
+
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+
+    body = functools.partial(
+        _flash_body, bq=bq, bkv=bkv, nkv=nkv, causal=causal, scale=scale
+    )
+    out = pl.pallas_call(
+        body,
+        grid=(b * h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, dh), q.dtype),
+        scratch_shapes=[
+            pl_scratch((bq,)),
+            pl_scratch((bq,)),
+            pl_scratch((bq, dh)),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(b, h, t, dh).transpose(0, 2, 1, 3)
+
+
+def pl_scratch(shape):
+    """VMEM scratch allocation (TPU semantics; interpret-mode compatible)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

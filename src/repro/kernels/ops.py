@@ -1,0 +1,109 @@
+"""Jitted public wrappers around the Pallas frontal-factorization kernels.
+
+``partial_cholesky(front, nb)`` matches ``ref.partial_cholesky_ref`` exactly
+(up to dtype roundoff): it pads the front to 128-multiples with a unit
+diagonal (padded pivots factor to no-ops), picks the VMEM-resident kernel
+for fronts ≤ VMEM_FRONT_MAX and the panel+SYRK pipeline above that, and
+slices the (panel, schur) outputs back to the caller's shapes.
+
+On non-TPU backends the kernels run in interpret mode (the body executes as
+plain JAX ops) — this is the CPU-container validation path; on TPU the same
+code lowers to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .frontal_cholesky import (
+    TILE,
+    VMEM_FRONT_MAX,
+    front_factor_vmem,
+    panel_factor,
+    syrk_downdate,
+)
+
+OUTER_PANEL = 512  # large-front pivot panel width
+
+
+def _should_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@partial(jax.jit, static_argnames=("nb", "interpret"))
+def _partial_cholesky_impl(
+    front: jax.Array, nb: int, interpret: bool
+) -> Tuple[jax.Array, jax.Array]:
+    m = front.shape[0]
+    mb = m - nb  # border size
+    nbp = _round_up(max(nb, 1), TILE)
+    mbp = _round_up(mb, TILE) if mb > 0 else 0
+    mp = nbp + mbp
+
+    # padded front with unit diagonal; real blocks placed so pivots occupy
+    # [0, nb) and the border occupies [nbp, nbp+mb)
+    f = jnp.eye(mp, dtype=front.dtype)
+    f = f.at[:nb, :nb].set(front[:nb, :nb])
+    if mb > 0:
+        f = f.at[nbp : nbp + mb, :nb].set(front[nb:, :nb])
+        f = f.at[:nb, nbp : nbp + mb].set(front[:nb, nb:])
+        f = f.at[nbp : nbp + mb, nbp : nbp + mb].set(front[nb:, nb:])
+
+    if mp <= VMEM_FRONT_MAX:
+        out = front_factor_vmem(f, nbp, interpret=interpret)
+    else:
+        out = f
+        for k in range(0, nbp, OUTER_PANEL):
+            pw = min(OUTER_PANEL, nbp - k)
+            slab = jax.lax.dynamic_slice(out, (k, k), (mp - k, pw))
+            lp = panel_factor(slab, interpret=interpret)
+            out = jax.lax.dynamic_update_slice(out, lp, (k, k))
+            trail = mp - k - pw
+            if trail > 0:
+                c = jax.lax.dynamic_slice(out, (k + pw, k + pw), (trail, trail))
+                tile = 256 if trail % 256 == 0 else TILE
+                c = syrk_downdate(c, lp[pw:, :], tile=tile, interpret=interpret)
+                out = jax.lax.dynamic_update_slice(out, c, (k + pw, k + pw))
+
+    # gather outputs back to unpadded shapes
+    top = out[:nb, :nb]
+    if mb > 0:
+        bottom = out[nbp : nbp + mb, :nb]
+        panel = jnp.concatenate([top, bottom], axis=0)
+        schur = out[nbp : nbp + mb, nbp : nbp + mb]
+    else:
+        panel = top
+        schur = jnp.zeros((0, 0), dtype=front.dtype)
+    # the kernels leave garbage in the strictly-upper triangle of L11
+    tri = jnp.tril(jnp.ones((nb, nb), dtype=bool))
+    panel = panel.at[:nb, :].set(jnp.where(tri, panel[:nb, :], 0))
+    # symmetrize the Schur complement (kernels keep the lower triangle)
+    if mb > 0:
+        low = jnp.tril(schur)
+        schur = low + low.T - jnp.diag(jnp.diag(low))
+    return panel, schur
+
+
+def partial_cholesky(
+    front: jax.Array, nb: int, interpret: Optional[bool] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Pallas-backed partial Cholesky: (panel (m,nb), schur (m−nb, m−nb))."""
+    return _partial_cholesky_impl(front, nb, _should_interpret(interpret))
+
+
+def factor_fn(interpret: Optional[bool] = None):
+    """A FactorFn (front, nb) → (panel, schur) for the multifrontal driver."""
+
+    def fn(front: jax.Array, nb: int):
+        return partial_cholesky(front, nb, interpret=interpret)
+
+    return fn

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the frontal factorization kernels.
+
+These define the semantics the Pallas kernels must match (asserted with
+allclose sweeps in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("nb",))
+def partial_cholesky_ref(front: jax.Array, nb: int) -> Tuple[jax.Array, jax.Array]:
+    """Partial Cholesky of the leading nb columns of a symmetric m×m front.
+
+    Returns (panel, schur): panel (m, nb) = [L11; L21] with L11 lower
+    triangular; schur (m−nb, m−nb) = A22 − L21·L21ᵀ.
+    """
+    a11 = front[:nb, :nb]
+    a21 = front[nb:, :nb]
+    a22 = front[nb:, nb:]
+    l11 = jnp.linalg.cholesky(a11)
+    l21t = jax.scipy.linalg.solve_triangular(l11, a21.T, lower=True)
+    l21 = l21t.T
+    schur = a22 - l21 @ l21.T
+    panel = jnp.concatenate([l11, l21], axis=0)
+    return panel, schur
+
+
+@jax.jit
+def panel_factor_ref(slab: jax.Array) -> jax.Array:
+    """Factor an (M, NB) slab whose leading NB×NB block is SPD.
+
+    Output: [L11; A21·L11^{-T}] — i.e. partial_cholesky restricted to the
+    panel (no trailing Schur update).
+    """
+    nb = slab.shape[1]
+    a11 = slab[:nb, :]
+    a21 = slab[nb:, :]
+    l11 = jnp.linalg.cholesky(a11)
+    l21 = jax.scipy.linalg.solve_triangular(l11, a21.T, lower=True).T
+    return jnp.concatenate([l11, l21], axis=0)
+
+
+@jax.jit
+def syrk_update_ref(c: jax.Array, a: jax.Array) -> jax.Array:
+    """C − A·Aᵀ (symmetric rank-NB downdate of the trailing submatrix)."""
+    return c - a @ a.T

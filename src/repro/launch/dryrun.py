@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × shape × mesh) cell: build ShapeDtypeStruct inputs,
+jit the right step (train_step / prefill_step / serve_step) with production
+in/out shardings, ``.lower()``, ``.compile()``, and record
+``memory_analysis()`` / ``cost_analysis()`` / the collective schedule parsed
+from the optimized HLO.  No arrays are ever allocated at full scale.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+  (add --multi-pod for the 2×16×16 mesh)
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.distributed.constraints import active_mesh
+from repro.distributed.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    dp_axes,
+    param_pspecs,
+)
+from repro.launch.mesh import make_production_mesh, mesh_devices
+from repro.models.config import SHAPES, cell_is_runnable, shape_by_name
+from repro.models.model import (
+    batch_specs,
+    build_decode_fn,
+    build_loss_fn,
+    build_prefill_fn,
+    decode_input_specs,
+    param_specs,
+)
+from repro.launch.hlocost import analyze as hlo_analyze, bf16_legalization_bytes
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+def _opt_pspecs(pspecs, params_shape, mesh):
+    """ZeRO-1: shard moment tensors additionally over the DP axes on the
+    first replicated dim that divides."""
+    dp = dp_axes(mesh)
+    import numpy as np
+
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def z(spec, leaf):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, d in enumerate(dims):
+            if d is None and leaf.shape[i] % dp_total == 0 and leaf.shape[i] >= dp_total:
+                dims[i] = dp
+                break
+        return P(*dims)
+
+    mom = jax.tree.map(
+        z, pspecs, params_shape, is_leaf=lambda x: isinstance(x, P)
+    )
+    return {"mu": mom, "nu": mom, "step": P()}
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    microbatches: int = 0,
+    attn_block: int = 512,
+    decode_cache_policy: str = "auto",
+    donate: bool = True,
+) -> Dict[str, Any]:
+    cfg = configs.get(arch)
+    shape = shape_by_name(shape_name)
+    if not cell_is_runnable(cfg, shape):
+        return {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "skipped",
+            "reason": "long_500k requires sub-quadratic attention (DESIGN.md)",
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh_devices(mesh)
+    t0 = time.time()
+
+    params_shape = param_specs(cfg, dtype=jnp.bfloat16)
+    pspecs = param_pspecs(cfg, params_shape)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        bspecs = batch_specs(cfg, shape)
+        bps = batch_pspecs(cfg, shape, mesh)
+        b_shard = {k: NamedSharding(mesh, bps[k]) for k in bspecs}
+        opt_shape = jax.eval_shape(init_opt_state, params_shape)
+        ops = _opt_pspecs(pspecs, params_shape, mesh)
+        o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), ops,
+                               is_leaf=lambda x: isinstance(x, P))
+        if microbatches == 0:
+            import numpy as np
+            dp_total = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+            per_dp = shape.global_batch // dp_total
+            # large models need one-row microbatches to fit activations
+            big = cfg.n_params > 8e9
+            microbatches = max(1, min(16 if big else 8, per_dp))
+        loss_fn = build_loss_fn(cfg, remat=True, attn_block=attn_block)
+        opt_cfg = OptConfig()
+        grad_sharding = o_shard["mu"]  # ZeRO layout for the accumulator
+
+        def train_step(params, opt_state, batch):
+            def micro(a):
+                b = a.shape[0]
+                return a.reshape((microbatches, b // microbatches) + a.shape[1:])
+
+            mb = jax.tree.map(micro, batch)
+
+            def constrain_grads(g):
+                return jax.tree.map(
+                    lambda x, sh: jax.lax.with_sharding_constraint(x, sh),
+                    g, grad_sharding,
+                )
+
+            def acc(carry, m):
+                l_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, m)
+                g_acc = constrain_grads(
+                    jax.tree.map(lambda a, b_: a + b_ / microbatches, g_acc, g)
+                )
+                return (l_acc + l / microbatches, g_acc), None
+
+            # ZeRO-sharded accumulator: grads live reduce-scattered across
+            # DP; the (equally ZeRO-sharded) optimizer consumes them without
+            # ever materializing a replicated fp32 gradient.
+            zero = constrain_grads(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+            (loss, grads), _ = jax.lax.scan(acc, (0.0, zero), mb)
+            # run the optimizer math in the ZeRO layout: the fp32
+            # params/moments/update intermediates are (dp×model)-sharded,
+            # and only the final bf16 params are all-gathered back.
+            params_z = jax.tree.map(
+                lambda x, sh: jax.lax.with_sharding_constraint(x, sh),
+                params, grad_sharding,
+            )
+            new_p, new_s, stats = adamw_update(params_z, grads, opt_state, opt_cfg)
+            new_p = jax.tree.map(
+                lambda x, sh: jax.lax.with_sharding_constraint(x, sh),
+                new_p, p_shard,
+            )
+            stats["loss"] = loss
+            return new_p, new_s, stats
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        args = (params_shape, opt_shape, bspecs)
+    elif shape.kind == "prefill":
+        bspecs = batch_specs(cfg, shape)
+        bps = batch_pspecs(cfg, shape, mesh)
+        b_shard = {k: NamedSharding(mesh, bps[k]) for k in bspecs}
+        prefill_fn = build_prefill_fn(cfg, remat=False, attn_block=attn_block)
+        cspecs_shape = jax.eval_shape(
+            lambda p, b: prefill_fn(p, b), params_shape, bspecs
+        )[1]
+        cps = cache_pspecs(cfg, shape, mesh, cspecs_shape)
+        c_shard = {k: NamedSharding(mesh, v) for k, v in cps.items()}
+        fn = jax.jit(
+            prefill_fn,
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(None, c_shard),
+        )
+        args = (params_shape, bspecs)
+    else:  # decode
+        dspecs = decode_input_specs(cfg, shape)
+        cps = cache_pspecs(cfg, shape, mesh, dspecs["cache"])
+        c_shard = {k: NamedSharding(mesh, v) for k, v in cps.items()}
+        t_shard = NamedSharding(mesh, P(None, None))
+        decode_fn = build_decode_fn(cfg)
+        fn = jax.jit(
+            decode_fn,
+            in_shardings=(p_shard, c_shard, t_shard),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,) if donate else (),
+        )
+        args = (params_shape, dspecs["cache"], dspecs["token"])
+
+    with mesh, active_mesh(mesh):
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    summary = hlo_analyze(hlo)
+
+    flops = summary.flops
+    bytes_hbm = summary.bytes
+    coll = summary.collective_bytes
+    coll_total = summary.collective_total
+    mf_global = model_flops(cfg, shape)
+    mf_chip = mf_global / n_chips
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "chips": n_chips,
+        "kind": shape.kind,
+        "microbatches": microbatches if shape.kind == "train" else None,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # memory (per chip, bytes)
+        "arg_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "out_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        "bf16_legalization_bytes": bf16_legalization_bytes(hlo),
+        # per-chip roofline terms (seconds)
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_hbm,
+        "collective_bytes": coll_total,
+        "collectives": coll,
+        "xla_cost_flops_once": float(cost.get("flops", 0.0)),
+        "model_flops_chip": mf_chip,
+        "model_hlo_ratio": mf_chip / flops if flops else 0.0,
+        "convert_bytes": summary.convert_bytes,
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": bytes_hbm / HBM_BW,
+        "t_memory_tpu": max(bytes_hbm - summary.convert_bytes, flops * 0.0) / HBM_BW,
+        "t_collective": coll_total / ICI_BW,
+        "unknown_trip_whiles": summary.unknown_trip_whiles,
+    }
+    result["peak_bytes_tpu_est"] = max(
+        result["peak_bytes"] - result["bf16_legalization_bytes"],
+        result["arg_bytes"] + result["out_bytes"] - result["alias_bytes"],
+    )
+    terms = {k: result[k] for k in ("t_compute", "t_memory", "t_collective")}
+    result["bottleneck"] = max(terms, key=terms.get)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--attn-block", type=int, default=512)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCHS:
+            for s in SHAPES:
+                cells.append((arch, s.name))
+    else:
+        cells.append((args.arch, args.shape))
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                r = run_cell(arch, shape, multi_pod=mp,
+                             microbatches=args.microbatches,
+                             attn_block=args.attn_block)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                r = {"arch": arch, "shape": shape, "multi_pod": mp,
+                     "status": "error", "error": f"{type(e).__name__}: {e}",
+                     "trace": traceback.format_exc()[-2000:]}
+            results.append(r)
+            tag = "pod2" if mp else "pod1"
+            print(json.dumps({k: v for k, v in r.items() if k != "trace"}))
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                with open(os.path.join(
+                        args.out, f"{arch}__{shape}__{tag}.json"), "w") as f:
+                    json.dump(r, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

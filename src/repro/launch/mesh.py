@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run driver must set
+XLA_FLAGS before the first jax call.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1×1 mesh over the single CPU device (smoke tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_devices(mesh) -> int:
+    import numpy as np
+
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,34 @@
+"""Assigned-architecture model zoo (pure JAX).
+
+config       ModelConfig / MoEConfig / SSMConfig, the 40 shape cells
+common       norms, RoPE, MLPs, losses
+attention    GQA + blocked (flash-style) causal attention + decode cache
+moe          shared+routed top-k experts, per-row sort dispatch
+gla          chunked gated linear attention (RWKV-6 / Mamba-2 core)
+rwkv6        Finch blocks (time-mix / channel-mix)
+mamba2       SSD blocks
+transformer  model assembly, scan-over-layers, loss
+decode       prefill + single-token decode with caches
+model        facade: step builders, dry-run input specs
+"""
+from .config import (
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeCell,
+    SSMConfig,
+    cell_is_runnable,
+    shape_by_name,
+)
+from .model import (
+    batch_specs,
+    build_decode_fn,
+    build_loss_fn,
+    build_prefill_fn,
+    decode_input_specs,
+    param_specs,
+    random_batch,
+)
+from .transformer import forward, init_params, loss_fn
+
+__all__ = [k for k in dir() if not k.startswith("_")]

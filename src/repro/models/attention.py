@@ -1,0 +1,262 @@
+"""Grouped-query attention: train/prefill (blocked causal) and decode.
+
+Prefill/train use an XLA flash-style blocked attention (lax.scan over KV
+blocks with an online softmax): memory is O(T·block) instead of O(T²), which
+is what lets prefill_32k lower within HBM.  The baseline scans *all* KV
+blocks and masks future ones (≤2× flop waste on the causal skip — visible in
+the roofline's MODEL_FLOPS/HLO ratio and attacked in §Perf).
+
+GQA with n_kv_heads < TP degree: KV heads are repeated up to the TP degree
+(MaxText-style) so the head dimension shards; the repeat is done on the
+activations, weights stay at the true head count.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, apply_rope, dense_init, rmsnorm
+from .config import ModelConfig
+
+
+def attn_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    h, hkv = cfg.padded_n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    wo = dense_init(ks[3], (h * dh, d), dtype)
+    if h != cfg.n_heads:  # inert padding heads: zero their output rows
+        wo = wo.at[cfg.n_heads * dh :, :].set(0.0)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, h * dh), dtype),
+        "wk": dense_init(ks[1], (d, hkv * dh), dtype),
+        "wv": dense_init(ks[2], (d, hkv * dh), dtype),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _project_qkv(
+    x: jax.Array, p: Params, cfg: ModelConfig, positions: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, t, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, cfg.padded_n_heads, dh)
+    k = k.reshape(b, t, cfg.n_kv_heads, dh)
+    v = v.reshape(b, t, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:  # rope (None for cross-attention keys)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, T, Hkv, Dh) → (B, T, Hkv·n_rep, Dh)."""
+    if n_rep == 1:
+        return x
+    b, t, h, dh = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, t, h, n_rep, dh)).reshape(
+        b, t, h * n_rep, dh
+    )
+
+
+# ----------------------------------------------------------------------
+# Blocked causal attention (flash-style online softmax over KV blocks)
+# ----------------------------------------------------------------------
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block: int = 512,
+    q_offset: int = 0,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """q: (B, Tq, H, Dh); k, v: (B, Tk, H, Dh) — same head count (pre-repeated).
+
+    Scans KV in blocks with a running (max, sum, acc) carry per query.
+    ``q_offset``: absolute position of q[0] relative to k[0] (for
+    cross-chunk decode/prefill continuation).  ``kv_len``: scalar count of
+    valid KV positions (cross-attention over a partially filled memory).
+    """
+    b, tq, h, dh = q.shape
+    tk = k.shape[1]
+    blk = min(block, tk)
+    if tk % blk != 0:  # pad KV to a block multiple with masked slots
+        pad = blk - tk % blk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        tk_p = tk + pad
+    else:
+        tk_p = tk
+    nkv = tk_p // blk
+    scale = dh**-0.5
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # (B,H,Tq,Dh)
+    kb = k.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b, h, nkv, blk, dh)
+    vb = v.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b, h, nkv, blk, dh)
+    q_pos = q_offset + jnp.arange(tq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kj, vj, j = inputs
+        kv_pos = j * blk + jnp.arange(blk)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kj)
+        mask = kv_pos[None, :] <= (q_pos[:, None] if causal else tk_p)
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        mask = mask & (kv_pos < tk)[None, :]
+        if kv_len is not None:
+            mask = mask & (kv_pos < kv_len)[None, :]
+        logits = jnp.where(mask, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vj)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, tq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, tq), jnp.float32)
+    a0 = jnp.zeros((b, h, tq, dh), jnp.float32)
+    ks = kb.transpose(2, 0, 1, 3, 4)
+    vs = vb.transpose(2, 0, 1, 3, 4)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, jnp.arange(nkv)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Tq,H,Dh)
+
+
+def attention_forward(
+    x: jax.Array,
+    p: Params,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    window: Optional[int] = None,
+    kv_repeat: int = 1,
+    block: int = 512,
+) -> jax.Array:
+    """Full-sequence causal self-attention (train / prefill)."""
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    n_rep = cfg.padded_n_heads // cfg.n_kv_heads
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    o = blocked_attention(q, k, v, causal=True, window=window, block=block)
+    b, t = x.shape[:2]
+    return o.reshape(b, t, -1) @ p["wo"]
+
+
+# ----------------------------------------------------------------------
+# Decode with KV cache
+# ----------------------------------------------------------------------
+def init_kv_cache(
+    batch: int, max_len: int, cfg: ModelConfig, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    dh = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(
+    x: jax.Array,
+    p: Params,
+    cfg: ModelConfig,
+    cache: Dict[str, jax.Array],
+    position: jax.Array,
+    window: Optional[int] = None,
+    write_slot: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token step: x (B, 1, D); cache (B, S, Hkv, Dh); position scalar.
+
+    The new K/V row is written at ``write_slot`` (default: ``position``);
+    attention runs over the whole statically-shaped cache with a validity
+    mask.  Ring-buffer caches (sliding-window at long context) pass
+    ``write_slot = position % S``: once the ring has wrapped every slot is
+    valid (kv_pos ≤ position is then all-true), which matches a window of
+    size S up to RoPE-phase staleness of overwritten slots.
+    """
+    b = x.shape[0]
+    dh = cfg.resolved_head_dim
+    q, k, v = _project_qkv(x, p, cfg, position[None].astype(jnp.int32) if position.ndim == 0 else position)
+    slot = position if write_slot is None else write_slot
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot.astype(jnp.int32), axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot.astype(jnp.int32), axis=1
+    )
+    s = cache_k.shape[1]
+    kv_pos = jnp.arange(s)
+    valid = kv_pos <= position
+    if window is not None and write_slot is None:
+        valid = valid & (kv_pos > position - window)
+    # GQA-grouped einsum: no head repetition and no fp32 copy of the cache
+    # are ever materialized — the MXU accumulates in fp32 via
+    # preferred_element_type (this is what keeps decode_32k in HBM budget).
+    n_rep = cfg.padded_n_heads // cfg.n_kv_heads
+    scale = dh**-0.5
+    qg = (q * scale).reshape(b, 1, cfg.n_kv_heads, n_rep, dh)
+    logits = jnp.einsum(
+        "bqkrd,bskd->bkrqs", qg, cache_k,
+        preferred_element_type=jnp.float32,
+    )
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum(
+        "bkrqs,bskd->bqkrd", w.astype(cache_v.dtype), cache_v,
+        preferred_element_type=jnp.float32,
+    )
+    out = o.reshape(b, 1, -1).astype(x.dtype) @ p["wo"]
+    return out, {"k": cache_k, "v": cache_v}
+
+
+# ----------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ----------------------------------------------------------------------
+def cross_attn_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    return attn_params(key, cfg, dtype)
+
+
+def cross_attention(
+    x: jax.Array,
+    memory_kv: Tuple[jax.Array, jax.Array],
+    p: Params,
+    cfg: ModelConfig,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """x: (B, Tq, D); memory_kv: precomputed (K, V) of the encoder output."""
+    b, tq, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, tq, cfg.padded_n_heads, dh)
+    k, v = memory_kv
+    n_rep = cfg.padded_n_heads // cfg.n_kv_heads
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    o = blocked_attention(q, k, v, causal=False, kv_len=kv_len)
+    return o.reshape(b, tq, -1) @ p["wo"]
+
+
+def encode_memory_kv(
+    enc_out: jax.Array, p: Params, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    b, t, _ = enc_out.shape
+    dh = cfg.resolved_head_dim
+    k = (enc_out @ p["wk"]).reshape(b, t, cfg.n_kv_heads, dh)
+    v = (enc_out @ p["wv"]).reshape(b, t, cfg.n_kv_heads, dh)
+    return k, v

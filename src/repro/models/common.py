@@ -1,0 +1,125 @@
+"""Shared neural building blocks (pure JAX, no framework deps)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+# ----------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x: jax.Array, p: Params, kind: str, eps: float) -> jax.Array:
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+def norm_params(d: int, kind: str, dtype=jnp.float32) -> Params:
+    p: Params = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, Dh); positions: broadcastable to (..., T)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+def mlp_params(key, d: int, f: int, kind: str, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d**-0.5
+    s_out = f**-0.5
+    if kind == "swiglu":
+        return {
+            "w_gate": jax.random.normal(k1, (d, f), dtype) * s_in,
+            "w_up": jax.random.normal(k2, (d, f), dtype) * s_in,
+            "w_down": jax.random.normal(k3, (f, d), dtype) * s_out,
+        }
+    return {
+        "w_up": jax.random.normal(k1, (d, f), dtype) * s_in,
+        "b_up": jnp.zeros((f,), dtype),
+        "w_down": jax.random.normal(k2, (f, d), dtype) * s_out,
+        "b_down": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp_apply(x: jax.Array, p: Params, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        g = jax.nn.silu(x @ p["w_gate"])
+        return (g * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]
+
+
+# ----------------------------------------------------------------------
+# Losses
+# ----------------------------------------------------------------------
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """Mean token cross-entropy in fp32; labels < 0 are ignored.
+
+    Vocab-parallel safe: the label log-prob is extracted with a fused
+    select-and-reduce over the (possibly model-sharded) vocab axis instead of
+    a gather, so XLA emits partial reductions + a scalar all-reduce rather
+    than all-gathering the logits.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    ll = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], lf, 0.0), axis=-1
+    )
+    nll = lse - ll
+    valid = (labels >= 0).astype(jnp.float32)
+    if mask is not None:
+        valid = valid * mask.astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+# ----------------------------------------------------------------------
+# Init helpers
+# ----------------------------------------------------------------------
+def dense_init(key, shape: Tuple[int, ...], dtype=jnp.float32, scale: Optional[float] = None):
+    fan_in = shape[0]
+    s = scale if scale is not None else fan_in**-0.5
+    return jax.random.normal(key, shape, dtype) * s
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02

@@ -1,0 +1,385 @@
+"""Serving: prefill (prompt → cache) and decode_step (one token, cached).
+
+Cache layouts (stacked on a leading layer axis, scanned like the weights):
+
+  dense / vlm / moe : k, v           (L, B, S, Hkv, Dh)
+  ssm (rwkv6)       : tm_last, cm_last (L, B, D); s (L, B, H, dk, dv)
+  hybrid (zamba2)   : conv (L, B, K−1, C); s (L, B, H, N, P);
+                      shared-attn k, v (G, B, S, H, Dh) — one per group
+                      (weights shared, caches distinct)
+  audio (enc-dec)   : self k, v (L, B, S, Hkv, Dh);
+                      cross k, v (L, B, S_src, Hkv, Dh) — precomputed
+
+``decode_step`` is the op the decode_32k / long_500k dry-run cells lower:
+one new token against a cache of ``seq_len`` capacity.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba2 as m2
+from . import moe as moe_mod
+from . import rwkv6 as r6
+from .common import apply_norm, mlp_apply
+from .config import ModelConfig
+
+PyTree = Any
+
+
+# ======================================================================
+# Cache initializers (zeros; shapes are what the dry-run lowers against)
+# ======================================================================
+def init_cache(
+    cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    l = cfg.n_layers
+    dh = cfg.resolved_head_dim
+    if cfg.family in ("dense", "vlm", "moe"):
+        shape = (l, batch, s_max, cfg.n_kv_heads, dh)
+        return {
+            "k": jnp.zeros(shape, dtype),
+            "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "ssm":  # rwkv6
+        d = cfg.d_model
+        h = d // cfg.ssm.head_dim
+        return {
+            "tm_last": jnp.zeros((l, batch, d), dtype),
+            "cm_last": jnp.zeros((l, batch, d), dtype),
+            "s": jnp.zeros((l, batch, h, cfg.ssm.head_dim, cfg.ssm.head_dim), jnp.float32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm.expand * cfg.d_model
+        nheads = d_inner // cfg.ssm.head_dim
+        conv_dim = d_inner + 2 * cfg.ssm.d_state
+        g = cfg.n_layers // (cfg.hybrid_attn_every or cfg.n_layers)
+        window = cfg.sliding_window or s_max
+        s_attn = min(window, s_max)
+        return {
+            "conv": jnp.zeros((l, batch, cfg.ssm.conv_width - 1, conv_dim), dtype),
+            "s": jnp.zeros(
+                (l, batch, nheads, cfg.ssm.d_state, cfg.ssm.head_dim), jnp.float32
+            ),
+            "ak": jnp.zeros((g, batch, s_attn, cfg.n_kv_heads, dh), dtype),
+            "av": jnp.zeros((g, batch, s_attn, cfg.n_kv_heads, dh), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "k": jnp.zeros((l, batch, s_max, cfg.n_kv_heads, dh), dtype),
+            "v": jnp.zeros((l, batch, s_max, cfg.n_kv_heads, dh), dtype),
+            "xk": jnp.zeros((l, batch, s_max, cfg.n_kv_heads, dh), dtype),
+            "xv": jnp.zeros((l, batch, s_max, cfg.n_kv_heads, dh), dtype),
+            "src_len": jnp.asarray(s_max, jnp.int32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+# ======================================================================
+# Decode step
+# ======================================================================
+def decode_step(
+    cfg: ModelConfig,
+    params: PyTree,
+    cache: Dict[str, jax.Array],
+    token: jax.Array,  # (B, 1) int32
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One autoregressive step.  Returns (logits (B, 1, Vp), new cache)."""
+    pos = cache["pos"]
+    x = params["embed"][token]  # (B,1,D)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        x = _attn_decode_stack(cfg, params, cache, x, pos)
+    elif cfg.family == "ssm":
+        x = _rwkv_decode_stack(cfg, params, cache, x)
+    elif cfg.family == "hybrid":
+        x = _hybrid_decode_stack(cfg, params, cache, x, pos)
+    elif cfg.family == "audio":
+        x = _audio_decode_stack(cfg, params, cache, x, pos)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    cache["pos"] = pos + 1
+    return logits, cache
+
+
+def _attn_decode_stack(cfg, params, cache, x, pos):
+    def body(x, xs):
+        lp, ck, cv = xs
+        h = apply_norm(x, lp["attn_norm"], cfg.norm, cfg.norm_eps)
+        out, c = attn.decode_attention(h, lp["attn"], cfg, {"k": ck, "v": cv}, pos)
+        x = x + out
+        h = apply_norm(x, lp["mlp_norm"], cfg.norm, cfg.norm_eps)
+        if cfg.family == "moe":
+            mo, _ = moe_mod.moe_apply(h, lp["moe"], cfg)
+            x = x + mo
+        else:
+            x = x + mlp_apply(h, lp["mlp"], cfg.mlp)
+        return x, (c["k"], c["v"])
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    cache["k"], cache["v"] = nk, nv
+    return x
+
+
+def _rwkv_decode_stack(cfg, params, cache, x):
+    x = x[:, 0]  # (B, D)
+
+    def body(x, xs):
+        lp, tm, cm, s = xs
+        st = {"tm_last": tm, "cm_last": cm, "s": s}
+        h = apply_norm(x, lp["tm_norm"], cfg.norm, cfg.norm_eps)
+        out, st = r6.time_mix_step(h, st, lp["rwkv"], cfg)
+        st["tm_last"] = h
+        x = x + out
+        h = apply_norm(x, lp["cm_norm"], cfg.norm, cfg.norm_eps)
+        out, st = r6.channel_mix_step(h, st, lp["rwkv"])
+        st["cm_last"] = h
+        x = x + out
+        return x, (st["tm_last"], st["cm_last"], st["s"])
+
+    x, (tm, cm, s) = jax.lax.scan(
+        body, x, (params["layers"], cache["tm_last"], cache["cm_last"], cache["s"])
+    )
+    cache["tm_last"], cache["cm_last"], cache["s"] = tm, cm, s
+    return x[:, None, :]
+
+
+def _hybrid_decode_stack(cfg, params, cache, x, pos):
+    every = cfg.hybrid_attn_every or cfg.n_layers
+    n_groups = cfg.n_layers // every
+    x = x[:, 0]
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, every) + a.shape[1:]), params["layers"]
+    )
+    conv_g = cache["conv"].reshape((n_groups, every) + cache["conv"].shape[1:])
+    s_g = cache["s"].reshape((n_groups, every) + cache["s"].shape[1:])
+    sp = params["shared_attn"]
+    s_attn = cache["ak"].shape[2]
+    # ring-buffer slot for the sliding-window cache (wraps at long context)
+    slot = jnp.remainder(pos, s_attn)
+
+    def mamba_body(x, xs):
+        lp, conv, s = xs
+        h = apply_norm(x, lp["norm"], cfg.norm, cfg.norm_eps)
+        out, st = m2.mamba2_step(h, {"conv": conv, "s": s}, lp["mamba"], cfg)
+        return x + out, (st["conv"], st["s"])
+
+    def group_body(x, xs):
+        glp, gconv, gs, ak, av = xs
+        x, (nconv, ns) = jax.lax.scan(mamba_body, x, (glp, gconv, gs))
+        h = apply_norm(x[:, None], sp["attn_norm"], cfg.norm, cfg.norm_eps)
+        out, c = attn.decode_attention(
+            h, sp["attn"], cfg, {"k": ak, "v": av}, pos, write_slot=slot
+        )
+        x = x + out[:, 0]
+        h = apply_norm(x[:, None], sp["mlp_norm"], cfg.norm, cfg.norm_eps)
+        x = x + mlp_apply(h, sp["mlp"], cfg.mlp)[:, 0]
+        return x, (nconv, ns, c["k"], c["v"])
+
+    x, (nconv, ns, nak, nav) = jax.lax.scan(
+        group_body, x, (grouped, conv_g, s_g, cache["ak"], cache["av"])
+    )
+    cache["conv"] = nconv.reshape(cache["conv"].shape)
+    cache["s"] = ns.reshape(cache["s"].shape)
+    cache["ak"], cache["av"] = nak, nav
+    return x[:, None, :]
+
+
+def _audio_decode_stack(cfg, params, cache, x, pos):
+    src_len = cache.get("src_len")
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        h = apply_norm(x, lp["attn_norm"], cfg.norm, cfg.norm_eps)
+        out, c = attn.decode_attention(h, lp["attn"], cfg, {"k": ck, "v": cv}, pos)
+        x = x + out
+        h = apply_norm(x, lp["cross_norm"], cfg.norm, cfg.norm_eps)
+        x = x + attn.cross_attention(h, (xk, xv), lp["cross"], cfg, kv_len=src_len)
+        h = apply_norm(x, lp["mlp_norm"], cfg.norm, cfg.norm_eps)
+        x = x + mlp_apply(h, lp["mlp"], cfg.mlp)
+        return x, (c["k"], c["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    cache["k"], cache["v"] = nk, nv
+    return x
+
+
+# ======================================================================
+# Prefill: prompt → (last-token logits, filled cache)
+# ======================================================================
+def prefill(
+    cfg: ModelConfig,
+    params: PyTree,
+    tokens: jax.Array,
+    *,
+    extra: Optional[Dict[str, jax.Array]] = None,
+    remat: bool = True,
+    attn_block: int = 512,
+    cache_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, t = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.family == "vlm":
+        patches = extra["patches"] @ params["frontend_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])[None, :]
+    n_rep = cfg.padded_n_heads // cfg.n_kv_heads
+
+    if cfg.family in ("dense", "vlm", "moe"):
+
+        def body(x, lp):
+            h = apply_norm(x, lp["attn_norm"], cfg.norm, cfg.norm_eps)
+            q, k, v = attn._project_qkv(h, lp["attn"], cfg, positions)
+            o = attn.blocked_attention(
+                q, attn.repeat_kv(k, n_rep), attn.repeat_kv(v, n_rep),
+                block=attn_block,
+            )
+            x = x + o.reshape(x.shape[0], x.shape[1], -1) @ lp["attn"]["wo"]
+            h = apply_norm(x, lp["mlp_norm"], cfg.norm, cfg.norm_eps)
+            if cfg.family == "moe":
+                mo, _ = moe_mod.moe_apply(h, lp["moe"], cfg)
+                x = x + mo
+            else:
+                x = x + mlp_apply(h, lp["mlp"], cfg.mlp)
+            return x, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+        fn = jax.checkpoint(body, static_argnums=()) if remat else body
+        x, (ks, vs) = jax.lax.scan(lambda c, lp: fn(c, lp), x, params["layers"])
+        cache = {"k": ks, "v": vs, "pos": jnp.asarray(x.shape[1], jnp.int32)}
+
+    elif cfg.family == "ssm":
+
+        def body(x, lp):
+            h = apply_norm(x, lp["tm_norm"], cfg.norm, cfg.norm_eps)
+            d = cfg.d_model
+            hd = cfg.ssm.head_dim
+            nh = d // hd
+            xx = r6._shift(h)
+            lerp = lambda mu: h + (xx - h) * mu
+            p = lp["rwkv"]
+            r_ = (lerp(p["mu_r"]) @ p["w_r"]).reshape(b, t, nh, hd)
+            k_ = (lerp(p["mu_k"]) @ p["w_k"]).reshape(b, t, nh, hd)
+            v_ = (lerp(p["mu_v"]) @ p["w_v"]).reshape(b, t, nh, hd)
+            g_ = jax.nn.silu(lerp(p["mu_g"]) @ p["w_g"])
+            w_ = r6._decay(lerp(p["mu_w"]), p).reshape(b, t, nh, hd)
+            o, s = r6.gla_chunked(r_, k_, v_, w_, u=p["u"], mode="pre",
+                                  chunk=cfg.ssm.chunk)
+            o = r6.rmsnorm(o, p["ln_x"], cfg.norm_eps).reshape(b, t, d) * g_
+            x = x + o @ p["w_o"]
+            tm_last = h[:, -1]
+            h2 = apply_norm(x, lp["cm_norm"], cfg.norm, cfg.norm_eps)
+            x = x + r6.channel_mix(h2, p)
+            return x, (tm_last.astype(cache_dtype), h2[:, -1].astype(cache_dtype), s)
+
+        fn = jax.checkpoint(body) if remat else body
+        x, (tm, cm, s) = jax.lax.scan(lambda c, lp: fn(c, lp), x, params["layers"])
+        cache = {"tm_last": tm, "cm_last": cm, "s": s,
+                 "pos": jnp.asarray(t, jnp.int32)}
+
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every or cfg.n_layers
+        n_groups = cfg.n_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]), params["layers"]
+        )
+        sp = params["shared_attn"]
+
+        def mamba_body(x, lp):
+            h = apply_norm(x, lp["norm"], cfg.norm, cfg.norm_eps)
+            out, (conv_tail, s) = m2.mamba2_forward(
+                h, lp["mamba"], cfg, cfg.ssm.chunk, return_state=True
+            )
+            return x + out, (conv_tail.astype(cache_dtype), s)
+
+        mfn = jax.checkpoint(mamba_body) if remat else mamba_body
+
+        def group_body(x, glp):
+            x, (conv, s) = jax.lax.scan(lambda c, lp: mfn(c, lp), x, glp)
+            h = apply_norm(x, sp["attn_norm"], cfg.norm, cfg.norm_eps)
+            q, k, v = attn._project_qkv(h, sp["attn"], cfg, positions)
+            o = attn.blocked_attention(
+                q, attn.repeat_kv(k, n_rep), attn.repeat_kv(v, n_rep),
+                block=attn_block,
+            )
+            x = x + o.reshape(x.shape[0], x.shape[1], -1) @ sp["attn"]["wo"]
+            h = apply_norm(x, sp["mlp_norm"], cfg.norm, cfg.norm_eps)
+            x = x + mlp_apply(h, sp["mlp"], cfg.mlp)
+            return x, (conv, s, k.astype(cache_dtype), v.astype(cache_dtype))
+
+        x, (conv, s, ak, av) = jax.lax.scan(group_body, x, grouped)
+        cache = {
+            "conv": conv.reshape((cfg.n_layers,) + conv.shape[2:]),
+            "s": s.reshape((cfg.n_layers,) + s.shape[2:]),
+            "ak": ak,
+            "av": av,
+            "pos": jnp.asarray(t, jnp.int32),
+        }
+
+    elif cfg.family == "audio":
+        enc_x = extra["frames"] @ params["frontend_proj"]
+        enc_pos = jnp.arange(enc_x.shape[1])[None, :]
+
+        def enc_body(x, lp):
+            h = apply_norm(x, lp["attn_norm"], cfg.norm, cfg.norm_eps)
+            q, k, v = attn._project_qkv(h, lp["attn"], cfg, enc_pos)
+            o = attn.blocked_attention(
+                q, attn.repeat_kv(k, n_rep), attn.repeat_kv(v, n_rep),
+                causal=False, block=attn_block,
+            )
+            x = x + o.reshape(x.shape[0], x.shape[1], -1) @ lp["attn"]["wo"]
+            h = apply_norm(x, lp["mlp_norm"], cfg.norm, cfg.norm_eps)
+            return x + mlp_apply(h, lp["mlp"], cfg.mlp), None
+
+        enc_x, _ = jax.lax.scan(enc_body, enc_x, params["encoder"]["layers"])
+        memory = apply_norm(
+            enc_x, params["encoder"]["final_norm"], cfg.norm, cfg.norm_eps
+        )
+
+        def dec_body(x, lp):
+            h = apply_norm(x, lp["attn_norm"], cfg.norm, cfg.norm_eps)
+            q, k, v = attn._project_qkv(h, lp["attn"], cfg, positions)
+            o = attn.blocked_attention(
+                q, attn.repeat_kv(k, n_rep), attn.repeat_kv(v, n_rep),
+                block=attn_block,
+            )
+            x = x + o.reshape(x.shape[0], x.shape[1], -1) @ lp["attn"]["wo"]
+            h = apply_norm(x, lp["cross_norm"], cfg.norm, cfg.norm_eps)
+            xk, xv = attn.encode_memory_kv(memory, lp["cross"], cfg)
+            x = x + attn.cross_attention(h, (xk, xv), lp["cross"], cfg)
+            h = apply_norm(x, lp["mlp_norm"], cfg.norm, cfg.norm_eps)
+            x = x + mlp_apply(h, lp["mlp"], cfg.mlp)
+            return x, (
+                k.astype(cache_dtype),
+                v.astype(cache_dtype),
+                xk.astype(cache_dtype),
+                xv.astype(cache_dtype),
+            )
+
+        dfn = jax.checkpoint(dec_body) if remat else dec_body
+        x, (ks, vs, xks, xvs) = jax.lax.scan(
+            lambda c, lp: dfn(c, lp), x, params["layers"]
+        )
+        cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs,
+                 "src_len": jnp.asarray(enc_x.shape[1], jnp.int32),
+                 "pos": jnp.asarray(t, jnp.int32)}
+
+    else:
+        raise NotImplementedError(cfg.family)
+
+    x = apply_norm(x[:, -1:], params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits, cache

@@ -1,0 +1,166 @@
+"""Chunked gated linear attention — the shared sequence-mixing core of
+RWKV-6 ("pre" read + bonus) and Mamba-2/SSD ("post" read).
+
+Recurrence per head (state S: dk×dv):
+    S_t = diag(exp(g_t)) · S_{t−1} + k_t v_tᵀ          g_t ≤ 0 (log-decay)
+    post:  o_t = q_tᵀ S_t                               (Mamba-2 / GLA)
+    pre :  o_t = q_tᵀ S_{t−1} + (q_t ⊙ u) · k_t v_t     (RWKV-6, u = bonus)
+
+Chunked evaluation (chunk length L): the *inter-chunk* terms are safe
+matmuls — the decay factors exp(c_t) and exp(c_L − c_s) are ≤ 1 because the
+cumulative log-decay c is non-increasing.  The *intra-chunk* term for
+per-channel decays cannot be factored into a matmul without exp(−c_s)
+(overflow for strong decays), so it runs as an exact short scan of length L
+— 32× less sequential depth than a full-T scan at T=4096, numerically safe
+for any decay.  (For scalar-per-head decays a masked-matmul intra path would
+be MXU-friendly; noted as a §Perf lever.)
+
+All shapes: q, k, g: (B, T, H, dk); v: (B, T, H, dv).  Returns output
+(B, T, H, dv) and the final state (B, H, dk, dv) for decode continuation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    g: jax.Array,
+    u: Optional[jax.Array] = None,
+    mode: str = "post",
+    chunk: int = 128,
+    initial_state: Optional[jax.Array] = None,
+    intra: str = "scan",
+) -> Tuple[jax.Array, jax.Array]:
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    l = min(chunk, t)
+    t_orig = t
+    if t % l != 0:
+        # pad with inert steps: k = v = 0 and g = 0 (decay 1) leave the
+        # state untouched; padded outputs are sliced away below.
+        pad = l - t % l
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, padw) for a in (q, k, v))
+        g = jnp.pad(g, padw)
+        t = t + pad
+    nc = t // l
+
+    f32 = jnp.float32
+    qc = q.astype(f32).reshape(b, nc, l, h, dk)
+    kc = k.astype(f32).reshape(b, nc, l, h, dk)
+    vc = v.astype(f32).reshape(b, nc, l, h, dv)
+    gc = g.astype(f32).reshape(b, nc, l, h, dk)
+    cc = jnp.cumsum(gc, axis=2)  # inclusive cumulative log-decay
+    c_last = cc[:, :, -1:, :, :]  # (B,nc,1,H,dk)
+
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, dk, dv), f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    def chunk_step(s, inp):
+        qj, kj, vj, gj, cj, cl = inp  # (B,L,H,dk) etc.; cl (B,1,H,dk)
+        # ---- inter-chunk: contribution of the carried state
+        if mode == "post":
+            qe = qj * jnp.exp(cj)
+        else:  # pre: decays applied only through t−1
+            qe = qj * jnp.exp(cj - gj)
+        o_inter = jnp.einsum("blhk,bhkv->blhv", qe, s)
+
+        if intra == "matmul":
+            # ---- intra-chunk via masked MXU matmuls (scalar-per-head decay
+            # only, e.g. Mamba-2/SSD): A[t,s] = (q_t·k_s)·exp(c_t − c_s),
+            # computed as a plain (L,L) gram matrix times an elementwise
+            # decay factor built from *differences* (≤ 0 ⇒ overflow-safe).
+            cs = cj[..., 0]  # (B,L,H) scalar cumulative log-decay
+            qk = jnp.einsum("blhk,bmhk->bhlm", qj, kj)
+            ld_k = cs.transpose(0, 2, 1)  # (B,H,L) key-side cumsum
+            if mode == "post":
+                ld_q = ld_k
+            else:  # pre: decays applied only through t−1 ⇒ c_t − g_t
+                ld_q = (cs - gj[..., 0]).transpose(0, 2, 1)
+            li = jnp.arange(qk.shape[2])
+            if mode == "post":
+                causal = li[:, None] >= li[None, :]
+            else:
+                causal = li[:, None] > li[None, :]
+            # mask in log space BEFORE exp: future entries would otherwise
+            # overflow (c_t − c_s > 0 for t < s under strong decay)
+            delta = ld_q[:, :, :, None] - ld_k[:, :, None, :]
+            delta = jnp.where(causal[None, None], delta, -jnp.inf)
+            w = qk * jnp.exp(delta)
+            o_intra = jnp.einsum("bhlm,bmhv->blhv", w, vj)
+            if mode == "pre":  # bonus diagonal term
+                diag_w = jnp.einsum(
+                    "blhk,blhk->blh", qj * (u if u is not None else 1.0), kj
+                )
+                o_intra = o_intra + diag_w[..., None] * vj
+        else:
+            # ---- intra-chunk: exact short scan (any per-channel decay)
+            def step(st, xs):
+                qt, kt, vt, gt = xs  # (B,H,dk),(B,H,dk),(B,H,dv),(B,H,dk)
+                st_new = st * jnp.exp(gt)[..., None] + kt[..., None] * vt[..., None, :]
+                if mode == "post":
+                    ot = jnp.einsum("bhk,bhkv->bhv", qt, st_new)
+                else:
+                    ot = jnp.einsum("bhk,bhkv->bhv", qt, st)
+                    if u is not None:
+                        ot = ot + jnp.einsum("bhk,bhk,bhv->bhv", qt * u, kt, vt)
+                    else:
+                        ot = ot + jnp.einsum("bhk,bhk,bhv->bhv", qt, kt, vt)
+                return st_new, ot
+
+            z0 = jnp.zeros((b, h, dk, dv), f32)
+            xs = (
+                qj.transpose(1, 0, 2, 3),
+                kj.transpose(1, 0, 2, 3),
+                vj.transpose(1, 0, 2, 3),
+                gj.transpose(1, 0, 2, 3),
+            )
+            _, o_intra = jax.lax.scan(step, z0, xs)
+            o_intra = o_intra.transpose(1, 0, 2, 3)  # (B,L,H,dv)
+
+        # ---- state carry: S' = diag(exp(c_L))·S + Σ_s (k_s ⊙ exp(c_L−c_s)) v_sᵀ
+        kd = kj * jnp.exp(cl - cj)
+        s_new = s * jnp.exp(cl[:, 0])[..., None] + jnp.einsum(
+            "blhk,blhv->bhkv", kd, vj
+        )
+        return s_new, o_inter + o_intra
+
+    inputs = tuple(
+        x.transpose(1, 0, 2, 3, 4) for x in (qc, kc, vc, gc, cc, c_last)
+    )
+    # chunk-level remat: backward stores only the (B,H,dk,dv) chunk-boundary
+    # states, not the T per-step states of the inner scan (≈ L× memory cut)
+    s_final, o = jax.lax.scan(jax.checkpoint(chunk_step), s0, inputs)
+    out = o.transpose(1, 0, 2, 3, 4).reshape(b, t, h, dv)[:, :t_orig]
+    return out.astype(q.dtype), s_final
+
+
+def gla_decode_step(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    g: jax.Array,
+    state: jax.Array,
+    u: Optional[jax.Array] = None,
+    mode: str = "post",
+) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence: q,k,g (B,H,dk), v (B,H,dv), state (B,H,dk,dv)."""
+    f32 = jnp.float32
+    qf, kf, vf, gf = (x.astype(f32) for x in (q, k, v, g))
+    st = state.astype(f32)
+    st_new = st * jnp.exp(gf)[..., None] + kf[..., None] * vf[..., None, :]
+    if mode == "post":
+        o = jnp.einsum("bhk,bhkv->bhv", qf, st_new)
+    else:
+        o = jnp.einsum("bhk,bhkv->bhv", qf, st)
+        bonus = qf * (u if u is not None else 1.0)
+        o = o + jnp.einsum("bhk,bhk,bhv->bhv", bonus, kf, vf)
+    return o.astype(q.dtype), st_new

@@ -1,0 +1,209 @@
+"""Mamba-2 (SSD, arXiv:2405.21060) block on the shared GLA core.
+
+State-space dual form: per head h with state size N and head dim P,
+    S_t = exp(a_h·Δ_t) · S_{t−1} + (Δ_t x_t) B_tᵀ     (S: N×P)
+    y_t = C_tᵀ S_t + D_h x_t
+which is GLA "post" mode with scalar-per-head log-decay g_t = a_h·Δ_t,
+k = B_t (shared across heads, n_groups = 1), q = C_t, v = Δ_t·x_t.
+
+Simplification vs reference: the short causal conv (width 4) is applied to
+the concatenated (x, B, C) projections as in the paper; initial-state
+handling and sequence-parallel chunking come from gla_chunked.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, dense_init, rmsnorm
+from .config import ModelConfig
+from .gla import gla_chunked, gla_decode_step
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    nheads = d_inner // ssm.head_dim
+    return d_inner, nheads, ssm.head_dim, ssm.d_state
+
+
+def mamba2_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    d_inner, nheads, hp, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 7)
+    return {
+        # separate in-projections (sharding-aligned boundaries)
+        "w_z": dense_init(ks[0], (d, d_inner), dtype),
+        "w_x": dense_init(ks[1], (d, d_inner), dtype),
+        "w_b": dense_init(ks[2], (d, n), dtype),
+        "w_c": dense_init(ks[3], (d, n), dtype),
+        "w_dt": dense_init(ks[4], (d, nheads), dtype),
+        "conv_w": dense_init(ks[6], (cfg.ssm.conv_width, conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.zeros((nheads,), dtype),  # a = −exp(a_log)
+        "dt_bias": jnp.zeros((nheads,), dtype),
+        "d_skip": jnp.ones((nheads,), dtype),
+        "norm": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[5], (d_inner, d), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along time: x (B, T, C), w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _split(x: jax.Array, p: Params):
+    return x @ p["w_z"], x @ p["w_x"], x @ p["w_b"], x @ p["w_c"], x @ p["w_dt"]
+
+
+def _ssd_chunked(
+    q: jax.Array,  # (B, T, N)   — C, shared across heads (n_groups = 1)
+    k: jax.Array,  # (B, T, N)   — B, shared across heads
+    v: jax.Array,  # (B, T, H, P)
+    g: jax.Array,  # (B, T, H)   — scalar per-head log-decay
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Head-shared SSD chunked scan (§Perf iteration 2 for zamba2).
+
+    Compared to routing through the generic GLA core, the (B,T,H,N)
+    broadcasts of q/k/g never materialize: the (L,L) gram is computed once
+    per chunk and shared across heads; decays enter as per-(b,l,h) scalars.
+    """
+    b, t, n = q.shape
+    h, p_dim = v.shape[2], v.shape[3]
+    l = min(chunk, t)
+    t_orig = t
+    if t % l != 0:
+        # inert padding steps: k = v = 0, g = 0 (decay 1) leave the state
+        # untouched; padded outputs are sliced away below.
+        pad = l - t % l
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))
+        t = t + pad
+    nc = t // l
+    f32 = jnp.float32
+    qc = q.astype(f32).reshape(b, nc, l, n)
+    kc = k.astype(f32).reshape(b, nc, l, n)
+    vc = v.astype(f32).reshape(b, nc, l, h, p_dim)
+    gc = g.astype(f32).reshape(b, nc, l, h)
+    cc = jnp.cumsum(gc, axis=2)  # (B,nc,L,H)
+    c_last = cc[:, :, -1, :]  # (B,nc,H)
+
+    li = jnp.arange(l)
+    causal = li[:, None] >= li[None, :]
+
+    def chunk_step(s, inp):  # s: (B,H,N,P)
+        qj, kj, vj, gj, cj, cl = inp
+        # inter-chunk: o1 = exp(c)·(q · S)
+        o1 = jnp.einsum("blk,bhkv->blhv", qj, s) * jnp.exp(cj)[..., None]
+        # intra-chunk: shared gram × per-head decay matrix
+        qk = jnp.einsum("blk,bmk->blm", qj, kj)  # (B,L,L)
+        delta = cj[:, :, None, :] - cj[:, None, :, :]  # (B,L,M,H)
+        delta = jnp.where(causal[None, :, :, None], delta, -jnp.inf)
+        w = qk[..., None] * jnp.exp(delta)  # (B,L,M,H)
+        o2 = jnp.einsum("blmh,bmhv->blhv", w, vj)
+        # state carry: S' = exp(c_L)·S + Σ_l k_l · exp(c_L − c_l) · v_l
+        decay_k = jnp.exp(cl[:, None, :] - cj)  # (B,L,H)
+        s_new = s * jnp.exp(cl)[:, :, None, None] + jnp.einsum(
+            "blk,blh,blhv->bhkv", kj, decay_k, vj
+        )
+        return s_new, o1 + o2
+
+    inputs = (
+        qc.transpose(1, 0, 2, 3),
+        kc.transpose(1, 0, 2, 3),
+        vc.transpose(1, 0, 2, 3, 4),
+        gc.transpose(1, 0, 2, 3),
+        cc.transpose(1, 0, 2, 3),
+        c_last.transpose(1, 0, 2),
+    )
+    s0 = jnp.zeros((b, h, n, p_dim), f32)
+    s_final, o = jax.lax.scan(jax.checkpoint(chunk_step), s0, inputs)
+    out = o.transpose(1, 0, 2, 3, 4).reshape(b, t, h, p_dim)[:, :t_orig]
+    return out.astype(v.dtype), s_final
+
+
+def mamba2_forward(
+    x: jax.Array, p: Params, cfg: ModelConfig, chunk: int,
+    return_state: bool = False,
+):
+    b, t, d = x.shape
+    d_inner, nheads, hp, n = _dims(cfg)
+    z, xin, bmat, cmat, dt = _split(x, p)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    conv_tail = conv_in[:, t - (cfg.ssm.conv_width - 1) :, :]
+    xin = conv_out[..., :d_inner].reshape(b, t, nheads, hp)
+    bmat = conv_out[..., d_inner : d_inner + n]
+    cmat = conv_out[..., d_inner + n :]
+
+    delta = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+    g_scalar = delta * a  # (B,T,H)
+    v = xin * delta[..., None]  # (B,T,H,P)
+
+    if cfg.ssm.intra == "ssd":
+        y, s_final = _ssd_chunked(cmat, bmat, v, g_scalar, chunk)
+    else:
+        g = jnp.broadcast_to(g_scalar[..., None], (b, t, nheads, n))
+        k = jnp.broadcast_to(bmat[:, :, None, :], (b, t, nheads, n))
+        q = jnp.broadcast_to(cmat[:, :, None, :], (b, t, nheads, n))
+        y, s_final = gla_chunked(q, k, v, g, mode="post", chunk=chunk,
+                                 intra=cfg.ssm.intra)
+    y = y.astype(x.dtype) + (xin * p["d_skip"][None, None, :, None]).astype(x.dtype)
+    y = y.reshape(b, t, d_inner)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z.astype(x.dtype))
+    out = y @ p["w_out"]
+    if return_state:
+        return out, (conv_tail, s_final)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Decode: state = (conv tail (B, K−1, conv_dim), ssm state (B,H,N,P))
+# ----------------------------------------------------------------------
+def mamba2_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d_inner, nheads, hp, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_dim), dtype),
+        "s": jnp.zeros((batch, nheads, n, hp), jnp.float32),
+    }
+
+
+def mamba2_step(
+    x: jax.Array, st: Dict[str, jax.Array], p: Params, cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, D) one token."""
+    b, d = x.shape
+    d_inner, nheads, hp, n = _dims(cfg)
+    z, xin, bmat, cmat, dt = _split(x, p)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)  # (B, conv_dim)
+    hist = jnp.concatenate([st["conv"], conv_in[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :d_inner].reshape(b, nheads, hp)
+    bmat = conv_out[..., d_inner : d_inner + n]
+    cmat = conv_out[..., d_inner + n :]
+
+    delta = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    g = jnp.broadcast_to((delta * a)[..., None], (b, nheads, n))
+    k = jnp.broadcast_to(bmat[:, None, :], (b, nheads, n))
+    q = jnp.broadcast_to(cmat[:, None, :], (b, nheads, n))
+    v = xin * delta[..., None]
+
+    y, s_new = gla_decode_step(q, k, v, g, st["s"], mode="post")
+    y = y + xin * p["d_skip"][None, :, None]
+    y = y.reshape(b, d_inner)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_out"], {"conv": hist[:, 1:], "s": s_new}

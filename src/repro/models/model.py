@@ -1,0 +1,103 @@
+"""Facade: build train/prefill/decode callables and dry-run input specs for
+any registered architecture."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import decode as dec
+from . import transformer as tf
+from .config import ModelConfig, ShapeCell
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — weak-type-correct, shardable,
+# no device allocation).  ``batch`` is the GLOBAL batch of the shape cell.
+# ----------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)
+    }
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16
+        )
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.bfloat16)
+    return specs
+
+
+def decode_input_specs(
+    cfg: ModelConfig, shape: ShapeCell, cache_dtype=jnp.bfloat16
+) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: dec.init_cache(cfg, b, s, dtype=cache_dtype)
+    )
+    return {
+        "cache": cache,
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+    }
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16) -> PyTree:
+    """Parameter ShapeDtypeStructs without allocation."""
+    return jax.eval_shape(
+        lambda: tf.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)
+    )
+
+
+# ----------------------------------------------------------------------
+# Step builders
+# ----------------------------------------------------------------------
+def build_loss_fn(
+    cfg: ModelConfig, remat: bool = True, attn_block: int = 512
+) -> Callable[[PyTree, Dict[str, jax.Array]], jax.Array]:
+    return functools.partial(tf.loss_fn, cfg, remat=remat, attn_block=attn_block)
+
+
+def build_prefill_fn(
+    cfg: ModelConfig, remat: bool = True, attn_block: int = 512
+):
+    def fn(params, batch):
+        extra = {k: v for k, v in batch.items() if k != "tokens"}
+        return dec.prefill(
+            cfg, params, batch["tokens"], extra=extra, remat=remat,
+            attn_block=attn_block,
+        )
+
+    return fn
+
+
+def build_decode_fn(cfg: ModelConfig):
+    def fn(params, cache, token):
+        return dec.decode_step(cfg, params, dict(cache), token)
+
+    return fn
+
+
+# ----------------------------------------------------------------------
+# Smoke-test helpers (reduced configs on CPU)
+# ----------------------------------------------------------------------
+def random_batch(
+    cfg: ModelConfig, batch: int, seq: int, key
+) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    }
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            k2, (batch, cfg.frontend_len, cfg.frontend_dim), jnp.float32
+        )
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(
+            k3, (batch, seq, cfg.frontend_dim), jnp.float32
+        )
+    return out

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts layer: shared + routed top-k experts.
+
+Dispatch is *per sequence row* (vmap over batch): top-k routing, a stable
+sort of the (T·k) assignments by expert, capacity-truncated gather into an
+(E, C, D) expert batch, expert SwiGLU via a single stacked einsum, weighted
+scatter-combine.  Keeping the sort per-row means data-parallel shards never
+communicate for routing — only the expert weights' sharding (TP on the
+expert hidden dim by default, optionally EP on the expert dim) introduces
+collectives.
+
+PM tie-in (beyond paper): ``expert_loads`` exposes the router's expected
+per-expert token load; repro.core treats experts as independent malleable
+tasks and the (p,q)/k-node partitioners (§6) produce placement plans — see
+moe_pm.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain, shard_over_dp
+
+from .common import Params, dense_init
+from .config import ModelConfig, MoEConfig
+
+
+def moe_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    m = cfg.moe
+    assert m is not None
+    d, f = cfg.d_model, m.d_expert
+    e_pad = cfg.padded_n_experts  # expert stacks padded for EP sharding
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": dense_init(ks[0], (d, m.n_experts), dtype, scale=0.02),
+        "w_gate": dense_init(ks[1], (e_pad, d, f), dtype),
+        "w_up": dense_init(ks[2], (e_pad, d, f), dtype),
+        "w_down": dense_init(ks[3], (e_pad, f, d), dtype, scale=f**-0.5),
+    }
+    if m.n_shared > 0:
+        fs = m.n_shared * f
+        sk = jax.random.split(ks[4], 3)
+        p["shared_gate"] = dense_init(sk[0], (d, fs), dtype)
+        p["shared_up"] = dense_init(sk[1], (d, fs), dtype)
+        p["shared_down"] = dense_init(sk[2], (fs, d), dtype, scale=fs**-0.5)
+    return p
+
+
+def _capacity(t: int, m: MoEConfig) -> int:
+    c = int(t * m.top_k * m.capacity_factor / m.n_experts) + 1
+    return max(4, (c + 3) // 4 * 4)
+
+
+def _dispatch_row(
+    idx: jax.Array, gate: jax.Array, e: int, c: int
+) -> Tuple[jax.Array, jax.Array]:
+    """idx, gate: (T, k) → table (E, C) of token ids (-1 empty), gates (E, C).
+
+    Tokens beyond an expert's capacity are dropped (standard GShard
+    behaviour); the residual connection carries them unchanged.
+    """
+    t, k = idx.shape
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # segment starts via a vectorized rank count (a searchsorted would lower
+    # to a while-loop binary search that blocks SPMD batch partitioning)
+    seg_start = jnp.sum(
+        sorted_e[:, None] < jnp.arange(e)[None, :], axis=0
+    ).astype(jnp.int32)
+    pos = jnp.arange(t * k) - seg_start[sorted_e]
+    keep = pos < c
+    token_of = order // k
+    slot = jnp.where(keep, pos, c - 1)
+    table = jnp.full((e, c), -1, dtype=jnp.int32)
+    table = table.at[sorted_e, slot].set(
+        jnp.where(keep, token_of, -1).astype(jnp.int32), mode="drop"
+    )
+    gates = jnp.zeros((e, c), dtype=gate.dtype)
+    gates = gates.at[sorted_e, slot].set(
+        jnp.where(keep, gate.reshape(-1)[order], 0.0), mode="drop"
+    )
+    return table, gates
+
+
+def moe_apply(
+    x: jax.Array, p: Params, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) → (out, aux_loss)."""
+    m = cfg.moe
+    assert m is not None
+    b, t, d = x.shape
+    e, k = m.n_experts, m.top_k
+    c = _capacity(t, m)
+
+    e_pad = cfg.padded_n_experts  # == e unless "ep" sharding pads
+    logits = (x @ p["router"]).astype(jnp.float32)  # (B,T,E) true experts
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    table, gates = jax.vmap(lambda i, g: _dispatch_row(i, g, e_pad, c))(
+        top_i, top_p
+    )
+    ep = cfg.moe_sharding == "ep"
+    e_axis = "model" if ep else None  # experts sharded under EP
+    table = constrain(table, ("pod", "data"), e_axis)
+    gates = constrain(gates, ("pod", "data"), e_axis)
+    # gather expert inputs: (B, E, C, D)
+    xg = jnp.take_along_axis(
+        x[:, None, :, :].astype(x.dtype),
+        table.clip(0)[..., None].astype(jnp.int32),
+        axis=2,
+    ) * (table >= 0)[..., None]
+    xg = constrain(xg, ("pod", "data"), e_axis)
+
+    h = jnp.einsum("becd,edf->becf", xg, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xg, p["w_up"])
+    y = jnp.einsum("becf,efd->becd", jax.nn.silu(h) * u, p["w_down"])
+    y = constrain(y, ("pod", "data"), e_axis) * gates[..., None].astype(y.dtype)
+
+    # scatter-combine back to (B, T, D)
+    def combine_row(tbl, yr):
+        out = jnp.zeros((t, d), yr.dtype)
+        return out.at[tbl.clip(0).reshape(-1)].add(
+            (yr * (tbl >= 0)[..., None]).reshape(-1, d), mode="drop"
+        )
+
+    out = shard_over_dp(jax.vmap(combine_row)(table, y))
+
+    if m.n_shared > 0:
+        g = jax.nn.silu(x @ p["shared_gate"])
+        out = out + (g * (x @ p["shared_up"])) @ p["shared_down"]
+
+    # load-balancing aux loss (Switch): E · Σ_e f_e · P_e
+    me = probs.mean(axis=(0, 1))  # mean router prob per expert
+    counts = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    fe = counts / counts.sum()
+    aux = e * jnp.sum(fe * me) * m.aux_loss_weight
+    return out.astype(x.dtype), aux
+
+
+def expert_loads(probs_mean: jax.Array, flops_per_token: float) -> jax.Array:
+    """Expected per-expert work (malleable task lengths for the PM planner)."""
+    return probs_mean * flops_per_token

@@ -1,0 +1,150 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free time mixing with
+data-dependent decay, on the shared GLA core.
+
+Simplifications vs the reference implementation (noted for DESIGN.md):
+token-shift interpolation factors are static per channel (the paper adds a
+data-dependent LoRA on them); the decay LoRA is kept (w is data-dependent);
+per-head GroupNorm on the wkv output is an RMS norm per head.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, dense_init, rmsnorm
+from .config import ModelConfig
+from .gla import gla_chunked, gla_decode_step
+
+
+def rwkv6_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    assert ssm is not None
+    hd = ssm.head_dim
+    h = d // hd
+    lora = max(32, d // 32)
+    ks = jax.random.split(key, 12)
+    p: Params = {
+        # time-mix interpolation factors (static simplification)
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "w_r": dense_init(ks[0], (d, d), dtype),
+        "w_k": dense_init(ks[1], (d, d), dtype),
+        "w_v": dense_init(ks[2], (d, d), dtype),
+        "w_g": dense_init(ks[3], (d, d), dtype),
+        "w_o": dense_init(ks[4], (d, d), dtype),
+        # data-dependent decay LoRA: w = exp(−exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -1.0, dtype),
+        "w_lora_a": dense_init(ks[5], (d, lora), dtype),
+        "w_lora_b": dense_init(ks[6], (lora, d), dtype, scale=0.01),
+        "u": jnp.zeros((h, hd), dtype),  # per-head bonus
+        "ln_x": jnp.ones((hd,), dtype),  # per-head output norm
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, dtype),
+        "cm_mu_r": jnp.full((d,), 0.5, dtype),
+        "cm_k": dense_init(ks[7], (d, cfg.d_ff), dtype),
+        "cm_v": dense_init(ks[8], (cfg.d_ff, d), dtype),
+        "cm_r": dense_init(ks[9], (d, d), dtype),
+    }
+    return p
+
+
+def _shift(x: jax.Array, last: Optional[jax.Array] = None) -> jax.Array:
+    """Token shift: x_{t-1} (zeros or ``last`` for the first position)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _decay(xw: jax.Array, p: Params) -> jax.Array:
+    """log-decay g = −exp(w0 + tanh(x A) B) ≤ 0 (data-dependent)."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    return -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+
+
+def time_mix(
+    x: jax.Array, p: Params, cfg: ModelConfig, chunk: int
+) -> jax.Array:
+    b, t, d = x.shape
+    ssm = cfg.ssm
+    hd = ssm.head_dim
+    h = d // hd
+    xx = _shift(x)
+
+    def lerp(mu):
+        return x + (xx - x) * mu
+
+    r = (lerp(p["mu_r"]) @ p["w_r"]).reshape(b, t, h, hd)
+    k = (lerp(p["mu_k"]) @ p["w_k"]).reshape(b, t, h, hd)
+    v = (lerp(p["mu_v"]) @ p["w_v"]).reshape(b, t, h, hd)
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["w_g"])
+    w = _decay(lerp(p["mu_w"]), p).reshape(b, t, h, hd)
+
+    o, _ = gla_chunked(r, k, v, w, u=p["u"], mode="pre", chunk=chunk)
+    o = rmsnorm(o, p["ln_x"], cfg.norm_eps)  # per-head norm
+    o = o.reshape(b, t, d) * g
+    return o @ p["w_o"]
+
+
+def channel_mix(x: jax.Array, p: Params) -> jax.Array:
+    xx = _shift(x)
+    xk = x + (xx - x) * p["cm_mu_k"]
+    xr = x + (xx - x) * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return jax.nn.sigmoid(xr @ p["cm_r"]) * (k @ p["cm_v"])
+
+
+# ----------------------------------------------------------------------
+# Decode (recurrent) — state: (tm_last, cm_last, S)
+# ----------------------------------------------------------------------
+def rwkv6_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    hd = ssm.head_dim
+    h = d // hd
+    return {
+        "tm_last": jnp.zeros((batch, d), dtype),
+        "cm_last": jnp.zeros((batch, d), dtype),
+        "s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+    }
+
+
+def time_mix_step(
+    x: jax.Array, st: Dict[str, jax.Array], p: Params, cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, D) single token."""
+    b, d = x.shape
+    ssm = cfg.ssm
+    hd = ssm.head_dim
+    h = d // hd
+    xx = st["tm_last"]
+
+    def lerp(mu):
+        return x + (xx - x) * mu
+
+    r = (lerp(p["mu_r"]) @ p["w_r"]).reshape(b, h, hd)
+    k = (lerp(p["mu_k"]) @ p["w_k"]).reshape(b, h, hd)
+    v = (lerp(p["mu_v"]) @ p["w_v"]).reshape(b, h, hd)
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["w_g"])
+    w = _decay(lerp(p["mu_w"]), p).reshape(b, h, hd)
+    o, s_new = gla_decode_step(r, k, v, w, st["s"], u=p["u"], mode="pre")
+    o = rmsnorm(o, p["ln_x"], cfg.norm_eps).reshape(b, d) * g
+    out = o @ p["w_o"]
+    return out, {"tm_last": x, "cm_last": st["cm_last"], "s": s_new}
+
+
+def channel_mix_step(
+    x: jax.Array, st: Dict[str, jax.Array], p: Params
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    xx = st["cm_last"]
+    xk = x + (xx - x) * p["cm_mu_k"]
+    xr = x + (xx - x) * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    out = jax.nn.sigmoid(xr @ p["cm_r"]) * (k @ p["cm_v"])
+    st = dict(st)
+    st["cm_last"] = x
+    return out, st

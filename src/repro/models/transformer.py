@@ -1,0 +1,323 @@
+"""Model assembly: per-family layer definitions, lax.scan over stacked
+layers (flat HLO depth — required for 64-layer × 512-device lowering on a
+single-core host), forward/loss, prefill and decode.
+
+Parameter layout: every per-layer tensor is stacked on a leading L axis and
+consumed by lax.scan; weight-shared blocks (zamba2's attention) and globals
+(embeddings, norms, heads) live beside the stack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import shard_over_dp
+
+from . import attention as attn
+from . import mamba2 as m2
+from . import moe as moe_mod
+from . import rwkv6 as r6
+from .common import (
+    Params,
+    apply_norm,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_params,
+    norm_params,
+)
+from .config import ModelConfig
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------------
+# Per-layer parameter builders
+# ----------------------------------------------------------------------
+def _dense_layer_params(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+        "attn": attn.attn_params(k1, cfg, dtype),
+        "mlp_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+        "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def _moe_layer_params(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+        "attn": attn.attn_params(k1, cfg, dtype),
+        "mlp_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+        "moe": moe_mod.moe_params(k2, cfg, dtype),
+    }
+
+
+def _ssm_layer_params(key, cfg: ModelConfig, dtype) -> Params:
+    if cfg.ssm.kind == "rwkv6":
+        return {
+            "tm_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+            "rwkv": r6.rwkv6_params(key, cfg, dtype),
+            "cm_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+        }
+    return {
+        "norm": norm_params(cfg.d_model, cfg.norm, dtype),
+        "mamba": m2.mamba2_params(key, cfg, dtype),
+    }
+
+
+def _encdec_layer_params(key, cfg: ModelConfig, dtype, decoder: bool) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "attn_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+        "attn": attn.attn_params(ks[0], cfg, dtype),
+        "mlp_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+        "mlp": mlp_params(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+    }
+    if decoder:
+        p["cross_norm"] = norm_params(cfg.d_model, cfg.norm, dtype)
+        p["cross"] = attn.cross_attn_params(ks[2], cfg, dtype)
+    return p
+
+
+def layer_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    if cfg.family in ("dense", "vlm"):
+        return _dense_layer_params(key, cfg, dtype)
+    if cfg.family == "moe":
+        return _moe_layer_params(key, cfg, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        return _ssm_layer_params(key, cfg, dtype)
+    if cfg.family == "audio":
+        return _encdec_layer_params(key, cfg, dtype, decoder=True)
+    raise ValueError(cfg.family)
+
+
+# ----------------------------------------------------------------------
+# Whole-model parameters
+# ----------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> PyTree:
+    keys = jax.random.split(key, 8)
+    v = cfg.padded_vocab()
+    params: Dict[str, PyTree] = {
+        "embed": embed_init(keys[0], v, cfg.d_model, dtype),
+        "final_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, v), dtype)
+    lkeys = jax.random.split(keys[2], cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: layer_params(k, cfg, dtype))(lkeys)
+    if cfg.family == "hybrid":
+        k1, k2 = jax.random.split(keys[3])
+        params["shared_attn"] = {
+            "attn_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+            "attn": attn.attn_params(k1, cfg, dtype),
+            "mlp_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+            "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+        }
+    if cfg.encdec:
+        ekeys = jax.random.split(keys[4], cfg.n_encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(
+                lambda k: _encdec_layer_params(k, cfg, dtype, decoder=False)
+            )(ekeys),
+            "final_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+        }
+    if cfg.frontend:
+        params["frontend_proj"] = dense_init(
+            keys[5], (cfg.frontend_dim, cfg.d_model), dtype
+        )
+    return params
+
+
+# ----------------------------------------------------------------------
+# Layer application (training / prefill path)
+# ----------------------------------------------------------------------
+def _apply_dense_layer(x, lp, cfg, positions, window=None, block=512):
+    h = apply_norm(x, lp["attn_norm"], cfg.norm, cfg.norm_eps)
+    x = x + attn.attention_forward(h, lp["attn"], cfg, positions, window=window, block=block)
+    h = apply_norm(x, lp["mlp_norm"], cfg.norm, cfg.norm_eps)
+    return x + mlp_apply(h, lp["mlp"], cfg.mlp)
+
+
+def _apply_moe_layer(x, lp, cfg, positions, block=512):
+    h = apply_norm(x, lp["attn_norm"], cfg.norm, cfg.norm_eps)
+    x = x + attn.attention_forward(h, lp["attn"], cfg, positions, block=block)
+    h = apply_norm(x, lp["mlp_norm"], cfg.norm, cfg.norm_eps)
+    out, aux = moe_mod.moe_apply(h, lp["moe"], cfg)
+    return x + out, aux
+
+
+def _apply_ssm_layer(x, lp, cfg):
+    chunk = cfg.ssm.chunk
+    if cfg.ssm.kind == "rwkv6":
+        h = apply_norm(x, lp["tm_norm"], cfg.norm, cfg.norm_eps)
+        x = x + r6.time_mix(h, lp["rwkv"], cfg, chunk)
+        h = apply_norm(x, lp["cm_norm"], cfg.norm, cfg.norm_eps)
+        return x + r6.channel_mix(h, lp["rwkv"])
+    h = apply_norm(x, lp["norm"], cfg.norm, cfg.norm_eps)
+    return x + m2.mamba2_forward(h, lp["mamba"], cfg, chunk)
+
+
+def _scan_layers(x, layers, body, remat: bool):
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, lp):
+        return fn(carry, lp), None
+
+    out, _ = jax.lax.scan(step, x, layers)
+    return out
+
+
+def _scan_layers_aux(x, layers, body, remat: bool):
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, lp):
+        x, aux = carry
+        x, a = fn(x, lp)
+        return (x, aux + a), None
+
+    (out, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), layers)
+    return out, aux
+
+
+# ----------------------------------------------------------------------
+# Forward (logits) per family
+# ----------------------------------------------------------------------
+def forward(
+    cfg: ModelConfig,
+    params: PyTree,
+    tokens: jax.Array,
+    *,
+    extra: Optional[Dict[str, jax.Array]] = None,
+    remat: bool = True,
+    window: Optional[int] = None,
+    attn_block: int = 512,
+) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, T) → (logits (B, T', Vp), aux_loss).  For vlm, T' includes
+    the prepended patch positions; for audio, tokens are the decoder side and
+    ``extra['frames']`` feeds the encoder."""
+    b, t = tokens.shape
+    aux = jnp.zeros((), jnp.float32)
+    x = shard_over_dp(params["embed"][tokens])
+
+    if cfg.family == "vlm":
+        patches = extra["patches"] @ params["frontend_proj"]
+        x = shard_over_dp(jnp.concatenate([patches.astype(x.dtype), x], axis=1))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    if cfg.family in ("dense", "vlm"):
+        body = functools.partial(
+            _apply_dense_layer, cfg=cfg, positions=positions, window=window,
+            block=attn_block,
+        )
+        x = _scan_layers(x, params["layers"], lambda c, lp: body(c, lp), remat)
+    elif cfg.family == "moe":
+        body = functools.partial(
+            _apply_moe_layer, cfg=cfg, positions=positions, block=attn_block
+        )
+        x, aux = _scan_layers_aux(
+            x, params["layers"], lambda c, lp: body(c, lp), remat
+        )
+    elif cfg.family == "ssm":
+        x = _scan_layers(
+            x, params["layers"], lambda c, lp: _apply_ssm_layer(c, lp, cfg), remat
+        )
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(cfg, params, x, positions, remat, window, attn_block)
+    elif cfg.family == "audio":
+        x = _encdec_forward(cfg, params, x, extra["frames"], positions, remat,
+                            attn_block)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits, aux
+
+
+def _hybrid_forward(cfg, params, x, positions, remat, window, attn_block):
+    """zamba2: groups of ``hybrid_attn_every`` mamba layers, a weight-shared
+    attention block between groups."""
+    every = cfg.hybrid_attn_every or cfg.n_layers
+    n_groups = cfg.n_layers // every
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, every) + a.shape[1:]), params["layers"]
+    )
+    sp = params["shared_attn"]
+
+    def group_step(x, glp):
+        x = _scan_layers(
+            x, glp, lambda c, lp: _apply_ssm_layer(c, lp, cfg), remat
+        )
+        x = _apply_dense_layer(x, sp, cfg, positions, window=window,
+                               block=attn_block)
+        return x, None
+
+    x, _ = jax.lax.scan(group_step, x, grouped)
+    rest = cfg.n_layers - n_groups * every
+    if rest:
+        tail = jax.tree.map(lambda a: a[-rest:], params["layers"])
+        x = _scan_layers(
+            x, tail, lambda c, lp: _apply_ssm_layer(c, lp, cfg), remat
+        )
+    return x
+
+
+def _encdec_forward(cfg, params, x_dec, frames, positions, remat, attn_block):
+    enc_x = frames @ params["frontend_proj"]
+    enc_pos = jnp.arange(enc_x.shape[1])[None, :]
+
+    def enc_body(x, lp):
+        h = apply_norm(x, lp["attn_norm"], cfg.norm, cfg.norm_eps)
+        q, k, v = attn._project_qkv(h, lp["attn"], cfg, enc_pos)
+        n_rep = cfg.padded_n_heads // cfg.n_kv_heads
+        o = attn.blocked_attention(
+            q, attn.repeat_kv(k, n_rep), attn.repeat_kv(v, n_rep),
+            causal=False, block=attn_block,
+        )
+        b_, t_ = x.shape[:2]
+        x = x + o.reshape(b_, t_, -1) @ lp["attn"]["wo"]
+        h = apply_norm(x, lp["mlp_norm"], cfg.norm, cfg.norm_eps)
+        return x + mlp_apply(h, lp["mlp"], cfg.mlp)
+
+    enc_x = _scan_layers(enc_x, params["encoder"]["layers"], enc_body, remat)
+    memory = apply_norm(
+        enc_x, params["encoder"]["final_norm"], cfg.norm, cfg.norm_eps
+    )
+
+    def dec_body(x, lp):
+        h = apply_norm(x, lp["attn_norm"], cfg.norm, cfg.norm_eps)
+        x = x + attn.attention_forward(h, lp["attn"], cfg, positions,
+                                       block=attn_block)
+        h = apply_norm(x, lp["cross_norm"], cfg.norm, cfg.norm_eps)
+        mem_kv = attn.encode_memory_kv(memory, lp["cross"], cfg)
+        x = x + attn.cross_attention(h, mem_kv, lp["cross"], cfg)
+        h = apply_norm(x, lp["mlp_norm"], cfg.norm, cfg.norm_eps)
+        return x + mlp_apply(h, lp["mlp"], cfg.mlp)
+
+    return _scan_layers(x_dec, params["layers"], dec_body, remat)
+
+
+# ----------------------------------------------------------------------
+# Loss
+# ----------------------------------------------------------------------
+def loss_fn(
+    cfg: ModelConfig,
+    params: PyTree,
+    batch: Dict[str, jax.Array],
+    remat: bool = True,
+    attn_block: int = 512,
+) -> jax.Array:
+    logits, aux = forward(
+        cfg, params, batch["tokens"], extra=batch, remat=remat,
+        attn_block=attn_block,
+    )
+    t = batch["tokens"].shape[1]
+    logits = logits[:, -t:, :]  # drop patch positions (vlm)
+    return cross_entropy(logits[:, :-1], batch["tokens"][:, 1:]) + aux

@@ -1,0 +1,9 @@
+from .elastic import (
+    ElasticController,
+    ElasticEvent,
+    HeartbeatMonitor,
+    run_elastic_schedule,
+)
+from .straggler import StragglerDetector, rebalance_two_pods
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,147 @@
+"""Fault tolerance and elastic capacity — the paper's p(t) made operational.
+
+The PM model is defined for *any* step-function processor profile p(t)
+(§4), and Lemma 4/Theorem 6 prove the optimal allocation ratios are
+invariant under p(t) changes — only absolute shares rescale.  That theorem
+is this module's fault-tolerance story:
+
+* node loss   → p(t) steps down → surviving tasks keep their ratios
+* node rejoin → p(t) steps up   → ditto
+* makespan under the new profile is Theorem 6's work-time inversion —
+  no re-optimization, an O(1) update of the profile plus an O(n) replan of
+  the discretized groups.
+
+``ElasticController`` glues the heartbeat failure detector to the PM
+planner; ``run_elastic_schedule`` simulates a tree execution under a
+failure trace and verifies work conservation (used by tests/benchmarks).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import TaskTree
+from repro.core.pm import tree_equivalent_lengths
+from repro.core.profiles import Profile
+from repro.sparse.plan import ExecutionPlan, make_plan, replan_elastic
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class HeartbeatMonitor:
+    """Failure detector over a simulated clock: a node is dead when its last
+    heartbeat is older than ``timeout``."""
+
+    n_nodes: int
+    timeout: float = 3.0
+    last_seen: Dict[int, float] = field(default_factory=dict)
+
+    def beat(self, node: int, t: float) -> None:
+        self.last_seen[node] = t
+
+    def alive(self, t: float) -> List[int]:
+        return [
+            i
+            for i in range(self.n_nodes)
+            if t - self.last_seen.get(i, 0.0) <= self.timeout
+        ]
+
+    def dead(self, t: float) -> List[int]:
+        return [i for i in range(self.n_nodes) if i not in self.alive(t)]
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class ElasticEvent:
+    time: float
+    devices: int  # new total device count
+
+
+@dataclass
+class ElasticController:
+    """Tracks capacity events and produces profiles/replans."""
+
+    initial_devices: int
+    events: List[ElasticEvent] = field(default_factory=list)
+
+    def capacity_change(self, time: float, devices: int) -> None:
+        self.events.append(ElasticEvent(time, devices))
+
+    def profile(self) -> Profile:
+        """p(t) from the event history (the paper's step function)."""
+        steps: List[Tuple[float, float]] = []
+        t_prev, p_prev = 0.0, float(self.initial_devices)
+        for ev in sorted(self.events, key=lambda e: e.time):
+            if ev.time > t_prev:
+                steps.append((ev.time - t_prev, p_prev))
+            t_prev, p_prev = ev.time, float(ev.devices)
+        steps.append((np.inf, p_prev))
+        return Profile.of(steps)
+
+    def pm_makespan(self, tree: TaskTree, alpha: float) -> float:
+        eq = tree_equivalent_lengths(tree, alpha)
+        return self.profile().time_for_work(eq[tree.root], alpha)
+
+
+# ----------------------------------------------------------------------
+def run_elastic_schedule(
+    tree: TaskTree,
+    alpha: float,
+    initial_devices: int,
+    failures: List[ElasticEvent],
+) -> Tuple[float, List[ExecutionPlan]]:
+    """Discretized execution under capacity events: plan, execute until the
+    next event, replan the residual on the new capacity.  Returns the total
+    makespan and the plan sequence."""
+    plans: List[ExecutionPlan] = []
+    t_global = 0.0
+    devices = initial_devices
+    remaining = tree
+    events = sorted(failures, key=lambda e: e.time)
+    k = 0
+    guard = 0
+    while True:
+        guard += 1
+        if guard > len(events) + 10:
+            raise RuntimeError("elastic loop did not converge")
+        plan = make_plan(remaining, devices, alpha)
+        plans.append(plan)
+        end = t_global + plan.makespan
+        if k < len(events) and events[k].time < end:
+            ev = events[k]
+            k += 1
+            # execute until the event, then rebuild residual work
+            local_t = ev.time - t_global
+            residual = _residual_tree(remaining, plan, local_t)
+            t_global = ev.time
+            devices = ev.devices
+            remaining = residual
+            if remaining.lengths.sum() <= 1e-12:
+                return t_global, plans
+        else:
+            return end, plans
+
+
+def _residual_tree(tree: TaskTree, plan: ExecutionPlan, t: float) -> TaskTree:
+    remaining = tree.lengths.astype(np.float64).copy()
+    for p in plan.tasks:
+        i = p.task
+        if p.end <= t:
+            remaining[i] = 0.0
+        elif p.start < t < p.end:
+            frac = (t - p.start) / (p.end - p.start)
+            remaining[i] *= 1.0 - frac
+    return TaskTree(
+        parent=tree.parent.copy(), lengths=remaining, labels=tree.labels.copy()
+    )
+
+
+__all__ = [
+    "ElasticController",
+    "ElasticEvent",
+    "HeartbeatMonitor",
+    "replan_elastic",
+    "run_elastic_schedule",
+]

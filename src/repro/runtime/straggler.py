@@ -1,0 +1,73 @@
+"""Straggler mitigation via the paper's *heterogeneous* scheduling (§6.2).
+
+A straggling node is a node whose effective speed dropped: the platform
+becomes heterogeneous.  Detection: per-node step-time history, robust
+z-score against the fleet median.  Mitigation: recompute allocations
+treating node speeds as processor counts — a node at relative speed σ
+contributes σ·p effective processors, and the paper's two-node
+heterogeneous machinery (Algorithm 12 / PM shares on Σσ_i·p) redistributes
+the malleable tasks accordingly.  This is exactly the paper's perspective
+§8: "more heterogeneous nodes, for which the value of α differs" — we keep
+α global and fold slowdown into capacity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.hetero import hetero_fptas
+
+
+@dataclass
+class StragglerDetector:
+    n_nodes: int
+    window: int = 16
+    threshold: float = 3.0  # robust z-score
+    history: Dict[int, List[float]] = field(default_factory=dict)
+
+    def record(self, node: int, step_time: float) -> None:
+        h = self.history.setdefault(node, [])
+        h.append(step_time)
+        if len(h) > self.window:
+            h.pop(0)
+
+    def node_speeds(self) -> np.ndarray:
+        """Relative speed per node (1.0 = fleet median)."""
+        med_time = np.median(
+            [np.median(h) for h in self.history.values() if h] or [1.0]
+        )
+        speeds = np.ones(self.n_nodes)
+        for i, h in self.history.items():
+            if h:
+                speeds[i] = med_time / np.median(h)
+        return speeds
+
+    def stragglers(self) -> List[int]:
+        times = {i: np.median(h) for i, h in self.history.items() if h}
+        if len(times) < 2:
+            return []
+        vals = np.array(list(times.values()))
+        med = np.median(vals)
+        mad = np.median(np.abs(vals - med)) + 1e-12
+        return [
+            i
+            for i, v in times.items()
+            if 0.6745 * (v - med) / mad > self.threshold
+        ]
+
+
+def rebalance_two_pods(
+    task_lengths: Sequence[float],
+    pod_devices: int,
+    speeds: Sequence[float],
+    alpha: float,
+    lam: float = 1.05,
+):
+    """Repartition independent tasks over two pods with measured speeds
+    (σ₀, σ₁): effective capacities p = σ₀·pod_devices, q = σ₁·pod_devices;
+    Algorithm 12 gives a λ-approximate split."""
+    p = speeds[0] * pod_devices
+    q = speeds[1] * pod_devices
+    return hetero_fptas(task_lengths, p, q, alpha, lam)

@@ -1,0 +1,3 @@
+from .pod_scheduler import Request, place_two_pods, place_two_pods_equal
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,65 @@
+"""Two-pod request placement — §6 applied to serving.
+
+Requests (prefill jobs, or whole factorization trees) are malleable tasks
+that must not span pods (constraint 𝓡 at the ICI/DCN boundary).  For two
+equal pods we use Algorithm 11 (trees) / the Lemma-10 greedy (independent
+requests); for unequal pods (a degraded pod after failures, or mixed
+generations) the Algorithm-12 FPTAS.  Request cost model: prefill flops
+≈ 2·N_active·prompt_tokens.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hetero import hetero_fptas, partition_makespan
+from repro.core.trees import star_tree
+from repro.core.two_node import homogeneous_two_node
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt_tokens: int
+
+
+def request_lengths(cfg: ModelConfig, requests: Sequence[Request]) -> np.ndarray:
+    return np.array(
+        [2.0 * cfg.n_active_params * r.prompt_tokens for r in requests],
+        dtype=np.float64,
+    )
+
+
+def place_two_pods_equal(
+    cfg: ModelConfig, requests: Sequence[Request], pod_devices: int, alpha: float
+) -> Tuple[float, List[int]]:
+    """Equal pods: Algorithm 11 on the star tree of requests.
+
+    Returns (makespan_estimate, pod id per request).
+    """
+    lengths = request_lengths(cfg, requests)
+    tree = star_tree(lengths)
+    res = homogeneous_two_node(tree, alpha, float(pod_devices))
+    # star_tree: label i+1 == request i... labels are identity over tree
+    # nodes; node 0 is the virtual root.
+    placement = [res.placement[i + 1] for i in range(len(requests))]
+    return res.makespan, placement
+
+
+def place_two_pods(
+    cfg: ModelConfig,
+    requests: Sequence[Request],
+    pod_p: int,
+    pod_q: int,
+    alpha: float,
+    lam: float = 1.05,
+) -> Tuple[float, List[int]]:
+    """Unequal pods: the Algorithm-12 FPTAS (λ-approximation)."""
+    lengths = request_lengths(cfg, requests)
+    res = hetero_fptas(lengths, float(pod_p), float(pod_q), alpha, lam)
+    placement = [0 if i in set(res.on_p) else 1 for i in range(len(requests))]
+    mk = partition_makespan(lengths, res.on_p, float(pod_p), float(pod_q), alpha)
+    return mk, placement

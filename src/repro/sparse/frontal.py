@@ -1,0 +1,62 @@
+"""Frontal matrix numeric kernels — jnp reference implementations.
+
+The multifrontal method factors A = LLᵀ by walking the assembly tree; at
+each supernode it (1) *assembles* a dense m×m frontal matrix from original
+matrix entries and the children's Schur complements (extend-add), then
+(2) *partially factorizes* the leading nb pivot columns, producing the
+factor panel and the front's own Schur complement passed to its parent.
+
+Step (2) is the malleable task whose p^α scaling the paper measures (§3);
+its TPU implementation lives in repro.kernels (Pallas); here is the pure-jnp
+oracle used by the driver on CPU and by the kernel tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("nb",))
+def partial_cholesky_ref(front: jax.Array, nb: int) -> Tuple[jax.Array, jax.Array]:
+    """Partial Cholesky of the leading nb columns of a symmetric front.
+
+    Returns (panel, schur): panel is m×nb with L11 (lower-triangular) on top
+    of L21; schur is the (m−nb)×(m−nb) update matrix A22 − L21·L21ᵀ.
+    """
+    a11 = front[:nb, :nb]
+    a21 = front[nb:, :nb]
+    a22 = front[nb:, nb:]
+    l11 = jnp.linalg.cholesky(a11)
+    # L21 = A21 · L11^{-T}  ⇔  L11 · L21ᵀ = A21ᵀ
+    l21t = jax.scipy.linalg.solve_triangular(l11, a21.T, lower=True)
+    l21 = l21t.T
+    schur = a22 - l21 @ l21.T
+    panel = jnp.concatenate([l11, l21], axis=0)
+    return panel, schur
+
+
+def assemble_front(
+    n_front: int,
+    a_block: np.ndarray,
+    child_updates,
+) -> jax.Array:
+    """Assemble a front: original entries + extend-add of children updates.
+
+    ``a_block``: dense (m, m) with the original-matrix entries already
+    scattered (host-side gather — index plumbing, not flops).
+    ``child_updates``: list of (local_idx, update) where ``local_idx`` maps
+    the child's border rows into this front's local indices.
+    """
+    f = jnp.asarray(a_block)
+    for local_idx, upd in child_updates:
+        f = f.at[np.ix_(local_idx, local_idx)].add(upd)
+    return f
+
+
+def full_cholesky_ref(a_dense: np.ndarray) -> np.ndarray:
+    """Dense reference for validation."""
+    return np.asarray(jnp.linalg.cholesky(jnp.asarray(a_dense)))

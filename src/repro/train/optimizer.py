@@ -1,0 +1,90 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping (pure JAX —
+no optax dependency in this environment).
+
+Optimizer state tensors (mu, nu) inherit the parameter PartitionSpecs, so
+the optimizer is sharded exactly like the model (per-device state = params/TP
+— the ZeRO-style memory behaviour falls out of TP sharding; a `zero1` flag
+additionally shards replicated tensors' state over the DP axes when their
+leading dim divides).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    clip_norm: float = 1.0
+    min_lr_ratio: float = 0.1
+
+
+def init_opt_state(params: PyTree) -> Dict[str, PyTree]:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {
+        "mu": zeros,
+        "nu": jax.tree.map(jnp.copy, zeros),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_at(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params: PyTree, grads: PyTree, state: Dict[str, PyTree], cfg: OptConfig
+) -> Tuple[PyTree, Dict[str, PyTree], Dict[str, jax.Array]]:
+    step = state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(step, cfg)
+    b1c = 1 - cfg.b1 ** (step.astype(jnp.float32) + 1)
+    b2c = 1 - cfg.b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step + 1}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

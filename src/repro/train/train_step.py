@@ -1,0 +1,69 @@
+"""The jitted training step: loss → grad → AdamW, with microbatch gradient
+accumulation (scan) so the per-step activation footprint is
+global_batch/microbatches regardless of the cell's global batch."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import build_loss_fn
+
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+PyTree = Any
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptConfig,
+    microbatches: int = 1,
+    remat: bool = True,
+    attn_block: int = 512,
+) -> Callable[[PyTree, PyTree, Dict[str, jax.Array]], Tuple[PyTree, PyTree, Dict]]:
+    loss_fn = build_loss_fn(cfg, remat=remat, attn_block=attn_block)
+
+    def split_micro(batch):
+        def r(a):
+            b = a.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return a.reshape((microbatches, b // microbatches) + a.shape[1:])
+
+        return jax.tree.map(r, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = split_micro(batch)
+
+            def acc_step(carry, mb):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (
+                    loss_acc + l / microbatches,
+                    jax.tree.map(
+                        lambda a, b: a + b / microbatches, grad_acc, g
+                    ),
+                ), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(acc_step, (0.0, zero), micro)
+        new_params, new_state, stats = adamw_update(params, grads, opt_state, opt_cfg)
+        stats = dict(stats)
+        stats["loss"] = loss
+        return new_params, new_state, stats
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key, dtype=jnp.float32):
+    from repro.models.transformer import init_params
+
+    params = init_params(cfg, key, dtype=dtype)
+    return params, init_opt_state(params)

@@ -1,0 +1,12 @@
+import os
+
+# Tests run on the single CPU device; the dry-run (and only it) forges 512.
+os.environ.setdefault("XLA_FLAGS", "")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,50 @@
+"""The dry-run driver itself, end to end, in a subprocess (it must own the
+XLA device-forging flag before jax initializes — hence not in-process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cell(arch, shape, multi_pod=False):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    last = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
+    return json.loads(last)
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cell_single_pod():
+    d = _run_cell("rwkv6-1.6b", "decode_32k")
+    assert d["status"] == "ok"
+    assert d["chips"] == 256
+    assert d["peak_bytes_tpu_est"] < 16e9
+    assert d["hlo_flops"] > 0 and d["hlo_bytes"] > 0
+    assert d["bottleneck"] in ("t_compute", "t_memory", "t_collective")
+
+
+@pytest.mark.slow
+def test_dryrun_train_cell_multi_pod():
+    d = _run_cell("qwen2.5-3b", "train_4k", multi_pod=True)
+    assert d["status"] == "ok"
+    assert d["chips"] == 512
+    assert d["peak_bytes_tpu_est"] < 16e9
+    assert d["model_hlo_ratio"] > 0.2  # sane useful-flops fraction
+
+
+@pytest.mark.slow
+def test_dryrun_skip_cell():
+    d = _run_cell("qwen3-4b", "long_500k")
+    assert d["status"] == "skipped"

@@ -1,0 +1,78 @@
+"""The loop-aware HLO cost model — deterministic unit checks on handwritten
+HLO text (flop counting, trip-count multiplication, collective ring costs,
+slice-aware fusion reads)."""
+import pytest
+
+from repro.launch.hlocost import analyze
+
+HLO = """
+HloModule test
+
+%fused_slice (param_0.1: f32[8,128,64], param_1.1: s32[]) -> f32[128,64] {
+  %param_0.1 = f32[8,128,64]{2,1,0} parameter(0)
+  %param_1.1 = s32[] parameter(1)
+  %c0 = s32[] constant(0)
+  %dynamic-slice.1 = f32[1,128,64]{2,1,0} dynamic-slice(%param_0.1, %param_1.1, %c0, %c0), dynamic_slice_sizes={1,128,64}
+  ROOT %bitcast.1 = f32[128,64]{2,1,0} bitcast(%dynamic-slice.1)
+}
+
+%body (param: (s32[], f32[64,64], f32[8,128,64])) -> (s32[], f32[64,64], f32[8,128,64]) {
+  %param = (s32[], f32[64,64], f32[8,128,64]) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%param), index=0
+  %gte.1 = f32[64,64]{1,0} get-tuple-element(%param), index=1
+  %gte.2 = f32[8,128,64]{2,1,0} get-tuple-element(%param), index=2
+  %w = f32[128,64]{2,1,0} fusion(%gte.2, %gte.0), kind=kLoop, calls=%fused_slice
+  %dot.1 = f32[64,64]{1,0} dot(%gte.1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[64,64]{1,0} all-reduce(%dot.1), replica_groups=[16,32]<=[512] to_apply=%add_comp
+  %c1 = s32[] constant(1)
+  %next = s32[] add(%gte.0, %c1)
+  ROOT %tuple.1 = (s32[], f32[64,64], f32[8,128,64]) tuple(%next, %ar, %gte.2)
+}
+
+%cond (param.1: (s32[], f32[64,64], f32[8,128,64])) -> pred[] {
+  %param.1 = (s32[], f32[64,64], f32[8,128,64]) parameter(0)
+  %gte.3 = s32[] get-tuple-element(%param.1), index=0
+  %c8 = s32[] constant(8)
+  ROOT %lt = pred[] compare(%gte.3, %c8), direction=LT
+}
+
+%add_comp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[64,64], p1: f32[8,128,64]) -> f32[64,64] {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  %p1 = f32[8,128,64]{2,1,0} parameter(1)
+  %c0.1 = s32[] constant(0)
+  %t = (s32[], f32[64,64], f32[8,128,64]) tuple(%c0.1, %p0, %p1)
+  %loop = (s32[], f32[64,64], f32[8,128,64]) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"8"}}
+  ROOT %out = f32[64,64]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_flops_multiplied_by_trip_count():
+    s = analyze(HLO)
+    # dot: (64,64) result × contracted 64 × 2 flops × 8 trips
+    assert s.flops == pytest.approx(2 * 64 * 64 * 64 * 8)
+
+
+def test_collective_ring_model_and_trips():
+    s = analyze(HLO)
+    # all-reduce of 64·64·4 bytes over groups of 32: 2·s·(n−1)/n, ×8 trips
+    expect = 2 * (64 * 64 * 4) * (31 / 32) * 8
+    assert s.collective_bytes["all-reduce"] == pytest.approx(expect)
+
+
+def test_fusion_reads_only_the_slice():
+    s = analyze(HLO)
+    # the fusion's big operand (8·128·64 f32) is consumed only by a
+    # dynamic-slice: charged at the slice size, not the full stack.
+    slice_bytes = 128 * 64 * 4
+    full_stack = 8 * slice_bytes
+    # fusion contributes (result + sliced operand) per trip; if the full
+    # stack were charged, bytes would exceed this bound by ≥ 7·slice·8
+    assert s.bytes < full_stack * 8  # loose upper guard
+    assert s.unknown_trip_whiles == 0

@@ -1,0 +1,43 @@
+"""attention_scan_bytes must attribute exactly the attention-while subtree
+(the flash-projection methodology's measurement side)."""
+from repro.launch.hlocost import analyze, attention_scan_bytes
+
+HLO = """
+HloModule t
+
+%attnbody (p: (s32[], f32[4,64])) -> (s32[], f32[4,64]) {
+  %p = (s32[], f32[4,64]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[4,64]{1,0} get-tuple-element(%p), index=1
+  %dot.a = f32[4,64]{1,0} dot(%g1, %g1), lhs_contracting_dims={1}, rhs_contracting_dims={1}, metadata={op_name="jit(f)/bhqd,bhkd->bhqk/dot_general"}
+  %one = s32[] constant(1)
+  %nx = s32[] add(%g0, %one)
+  ROOT %tp = (s32[], f32[4,64]) tuple(%nx, %dot.a)
+}
+
+%attncond (p.1: (s32[], f32[4,64])) -> pred[] {
+  %p.1 = (s32[], f32[4,64]) parameter(0)
+  %g2 = s32[] get-tuple-element(%p.1), index=0
+  %c4 = s32[] constant(4)
+  ROOT %lt = pred[] compare(%g2, %c4), direction=LT
+}
+
+ENTRY %main (x: f32[4,64]) -> f32[4,64] {
+  %x = f32[4,64]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %t0 = (s32[], f32[4,64]) tuple(%c0, %x)
+  %w = (s32[], f32[4,64]) while(%t0), condition=%attncond, body=%attnbody, backend_config={"known_trip_count":{"n":"4"}}
+  %big = f32[1024,1024]{1,0} broadcast(%c0), dimensions={}
+  %red = f32[] reduce(%big, %c0), dimensions={0,1}, to_apply=%attncond
+  ROOT %o = f32[4,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_attention_attribution_subset_of_total():
+    total = analyze(HLO).bytes
+    attn = attention_scan_bytes(HLO)
+    assert 0 < attn <= total
+    # the 4 MiB broadcast+reduce outside the attention while is NOT
+    # attributed to attention
+    assert total - attn >= 1024 * 1024 * 4

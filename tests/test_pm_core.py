@@ -1,0 +1,216 @@
+"""Paper §4–§5: equivalent lengths, the PM schedule, baselines, aggregation.
+
+Property tests check the exact invariants the paper proves:
+  * Definition 1 algebra (series additivity, parallel p-norm, associativity)
+  * Theorem 6: makespan == equivalent length / p^α; schedule validity per §4
+  * Lemma 4: constant ratios; siblings complete simultaneously
+  * optimality: PM beats arbitrary constant-share schedules
+  * §7 aggregation: no sub-unit shares, work conserved
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Profile,
+    TaskTree,
+    aggregate,
+    divisible_makespan,
+    equivalent_length,
+    from_pm,
+    min_task_share,
+    parallel,
+    pm_makespan_constant_p,
+    pm_schedule,
+    proportional_makespan,
+    proportional_schedule,
+    random_assembly_tree,
+    series,
+    simulate_constant_shares,
+    strategies_comparison,
+    task,
+    tree_equivalent_lengths,
+    tree_pm_windows,
+)
+
+
+# ----------------------------------------------------------------------
+# strategies
+# ----------------------------------------------------------------------
+alphas = st.floats(min_value=0.55, max_value=0.98)
+
+
+@st.composite
+def small_trees(draw, max_n=40):
+    n = draw(st.integers(min_value=1, max_value=max_n))
+    seed = draw(st.integers(min_value=0, max_value=2**31))
+    rng = np.random.default_rng(seed)
+    parent = np.full(n, -1, dtype=np.int64)
+    for i in range(1, n):
+        parent[i] = int(rng.integers(0, i))
+    lengths = rng.uniform(0.1, 10.0, size=n)
+    return TaskTree(parent=parent, lengths=lengths)
+
+
+# ----------------------------------------------------------------------
+# Definition 1 algebra
+# ----------------------------------------------------------------------
+@given(alphas, st.floats(0.1, 50), st.floats(0.1, 50))
+def test_parallel_composition_formula(alpha, l1, l2):
+    g = parallel(task(l1), task(l2))
+    expect = (l1 ** (1 / alpha) + l2 ** (1 / alpha)) ** alpha
+    assert equivalent_length(g, alpha) == pytest.approx(expect, rel=1e-12)
+
+
+@given(alphas, st.floats(0.1, 50), st.floats(0.1, 50))
+def test_series_additivity(alpha, l1, l2):
+    g = series(task(l1), task(l2))
+    assert equivalent_length(g, alpha) == pytest.approx(l1 + l2, rel=1e-12)
+
+
+@given(alphas, st.floats(0.1, 20), st.floats(0.1, 20), st.floats(0.1, 20))
+def test_parallel_associative(alpha, a, b, c):
+    g1 = parallel(task(a), parallel(task(b), task(c)))
+    g2 = parallel(parallel(task(a), task(b)), task(c))
+    g3 = parallel(task(a), task(b), task(c))
+    e1 = equivalent_length(g1, alpha)
+    assert e1 == pytest.approx(equivalent_length(g2, alpha), rel=1e-12)
+    assert e1 == pytest.approx(equivalent_length(g3, alpha), rel=1e-12)
+
+
+@given(alphas, st.floats(0.1, 20), st.floats(0.1, 20))
+def test_parallel_bounds(alpha, a, b):
+    """max(a,b) ≤ 𝓛(a‖b) ≤ a+b — tree parallelism helps, never hurts."""
+    e = equivalent_length(parallel(task(a), task(b)), alpha)
+    assert max(a, b) - 1e-12 <= e <= a + b + 1e-12
+
+
+# ----------------------------------------------------------------------
+# Theorem 6 / Lemma 4
+# ----------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(small_trees(), alphas, st.floats(2.0, 100.0))
+def test_pm_schedule_valid_and_optimal_makespan(tree, alpha, p):
+    prof = Profile.constant(p)
+    sched = from_pm(tree, alpha, prof)
+    sched.validate(tree, prof)
+    eq = tree_equivalent_lengths(tree, alpha)
+    assert sched.makespan() == pytest.approx(eq[tree.root] / p**alpha, rel=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(small_trees(max_n=20), alphas)
+def test_siblings_finish_simultaneously(tree, alpha):
+    w_start, w_end, ratio = tree_pm_windows(tree, alpha)
+    ch = tree.children_lists()
+    for i in range(tree.n):
+        kids = ch[i]
+        if len(kids) >= 2:
+            ends = [w_end[c] for c in kids]
+            assert max(ends) - min(ends) < 1e-9 * max(1.0, max(ends))
+
+
+@settings(max_examples=20, deadline=None)
+@given(small_trees(max_n=25), alphas, st.integers(0, 2**31))
+def test_pm_beats_random_constant_share_schedules(tree, alpha, seed):
+    rng = np.random.default_rng(seed)
+    p = 16.0
+    eq = tree_equivalent_lengths(tree, alpha)
+    m_pm = eq[tree.root] / p**alpha
+    # random speedup-unaware allocation: shares proportional to random weights
+    w = rng.uniform(0.1, 1.0, size=tree.n)
+    from repro.core.baselines import subtree_weights
+
+    sub = subtree_weights(tree) * w
+    ch = tree.children_lists()
+    share = np.zeros(tree.n)
+    share[tree.root] = p
+    for i in tree.topo_order()[::-1]:
+        kids = ch[i]
+        if kids:
+            denom = sum(sub[c] for c in kids)
+            for c in kids:
+                share[c] = share[i] * sub[c] / denom
+    sched = simulate_constant_shares(tree, share, Profile.constant(p), alpha)
+    sched.validate(tree, Profile.constant(p))
+    assert sched.makespan() >= m_pm - 1e-9 * m_pm
+
+
+def test_pm_under_step_profile_elastic(rng):
+    tree = random_assembly_tree(100, rng)
+    alpha = 0.9
+    prof = Profile.of([(0.5, 40.0), (1.0, 24.0), (np.inf, 40.0)])
+    sched = from_pm(tree, alpha, prof)
+    sched.validate(tree, prof)
+    eq = tree_equivalent_lengths(tree, alpha)
+    assert sched.makespan() == pytest.approx(
+        prof.time_for_work(eq[tree.root], alpha), rel=1e-9
+    )
+
+
+def test_profile_work_inversion_roundtrip():
+    prof = Profile.of([(1.0, 10.0), (2.0, 4.0), (np.inf, 8.0)])
+    for alpha in (0.6, 0.85, 1.0):
+        for t in (0.1, 0.9, 1.5, 3.5, 10.0):
+            w = prof.work_until(t, alpha)
+            assert prof.time_for_work(w, alpha) == pytest.approx(t, rel=1e-9)
+
+
+# ----------------------------------------------------------------------
+# §7 baselines + aggregation
+# ----------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(small_trees(max_n=30), alphas)
+def test_strategy_ordering(tree, alpha):
+    p = 40.0
+    m_pm, m_prop, m_div = strategies_comparison(tree, alpha, p)
+    assert m_pm <= m_prop + 1e-9 * m_prop
+    # DIVISIBLE is only dominated when there is real tree parallelism;
+    # PM never loses to it:
+    assert m_pm <= m_div + 1e-9 * m_div
+
+
+def test_proportional_simulation_matches_recursion(rng):
+    tree = random_assembly_tree(120, rng)
+    alpha = 0.8
+    m = proportional_makespan(tree, alpha, 40.0)
+    sched = proportional_schedule(tree, alpha, 40.0)
+    assert sched.makespan() == pytest.approx(m, rel=1e-6)
+
+
+def test_divisible_is_total_work(rng):
+    tree = random_assembly_tree(50, rng)
+    assert divisible_makespan(tree, 0.9, Profile.constant(10.0)) == pytest.approx(
+        tree.lengths.sum() / 10.0**0.9
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(small_trees(max_n=30), alphas)
+def test_aggregation_invariants(tree, alpha):
+    p = 40.0
+    sp = tree.to_sp()
+    ag = aggregate(sp, alpha, p)
+    assert min_task_share(ag, alpha, p) >= 1.0 - 1e-9
+    assert ag.total_length() == pytest.approx(sp.total_length(), rel=1e-9)
+    # aggregation can only lengthen the optimal fluid makespan
+    assert (
+        pm_makespan_constant_p(ag, alpha, p)
+        >= pm_makespan_constant_p(sp, alpha, p) - 1e-9
+    )
+
+
+def test_pm_schedule_sp_graph_ratios():
+    """Flow conservation: a series node's children inherit its ratio; a
+    parallel composition splits it by 𝓛^{1/α} (Lemma 4)."""
+    alpha = 0.8
+    g = series(parallel(task(3.0, label=0), task(5.0, label=1)), task(2.0, label=2))
+    sched = pm_schedule(g, alpha)
+    ratios = {iv.label: iv.ratio for iv in sched.intervals}
+    assert ratios[2] == pytest.approx(1.0)  # the series tail gets everything
+    l3, l5 = 3 ** (1 / alpha), 5 ** (1 / alpha)
+    assert ratios[0] == pytest.approx(l3 / (l3 + l5), rel=1e-9)
+    assert ratios[1] == pytest.approx(l5 / (l3 + l5), rel=1e-9)
+    # both branches span the same work window and end together
+    ivs = {iv.label: iv for iv in sched.intervals}
+    assert ivs[0].w_end == pytest.approx(ivs[1].w_end, rel=1e-12)

@@ -1,0 +1,43 @@
+"""Step-profile properties (§4 p(t)) — the elastic-capacity foundation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Profile
+
+
+@st.composite
+def profiles(draw):
+    n = draw(st.integers(1, 5))
+    steps = [
+        (draw(st.floats(0.1, 5.0)), draw(st.floats(0.5, 64.0)))
+        for _ in range(n)
+    ]
+    return Profile.of(steps)
+
+
+@settings(max_examples=40, deadline=None)
+@given(profiles(), st.floats(0.55, 1.0), st.floats(0.01, 40.0))
+def test_work_time_inversion_roundtrip(prof, alpha, t):
+    w = prof.work_until(t, alpha)
+    assert prof.time_for_work(w, alpha) == pytest.approx(t, rel=1e-9, abs=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(profiles(), st.floats(0.55, 1.0), st.floats(0.0, 10.0), st.floats(0.0, 10.0))
+def test_work_is_monotone_and_additive(prof, alpha, t1, dt):
+    w1 = prof.work_until(t1, alpha)
+    w2 = prof.work_until(t1 + dt, alpha)
+    assert w2 >= w1 - 1e-12
+    # restriction after t1 carries the remaining work
+    rest = prof.restricted_after(t1)
+    assert rest.work_until(dt, alpha) == pytest.approx(w2 - w1, rel=1e-6, abs=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(profiles(), st.floats(0.55, 1.0), st.floats(1.1, 4.0))
+def test_scaling_speeds_up(prof, alpha, f):
+    big = prof.scaled(f)
+    w = prof.work_until(3.0, alpha)
+    if w > 1e-9:
+        assert big.time_for_work(w, alpha) <= prof.time_for_work(w, alpha) + 1e-9

