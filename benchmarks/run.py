@@ -13,6 +13,7 @@ def main() -> None:
     from . import (
         bench_alpha_calibration,
         bench_discretization,
+        bench_executor,
         bench_fptas,
         bench_kernel,
         bench_moe_pm,
@@ -27,6 +28,7 @@ def main() -> None:
         ("fptas (S6.2, Corollary 19)", bench_fptas),
         ("discretization (DESIGN S7 adaptation)", bench_discretization),
         ("kernel (frontal Pallas)", bench_kernel),
+        ("executor (PM vs PROPORTIONAL, measured)", bench_executor),
         ("moe_pm (beyond-paper)", bench_moe_pm),
     ]
     print("name,us_per_call,derived")

@@ -1,4 +1,11 @@
 from .constraints import active_mesh, constrain, set_active_mesh, shard_model, shard_over_dp
+from .device_groups import (
+    DeviceGroup,
+    assign_wave_groups,
+    groups_footprint,
+    pow2_floor,
+    scale_group,
+)
 from .sharding import (
     activation_pspec,
     batch_pspecs,

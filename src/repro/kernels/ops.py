@@ -17,6 +17,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .frontal_cholesky import (
     TILE,
@@ -107,3 +108,79 @@ def factor_fn(interpret: Optional[bool] = None):
         return partial_cholesky(front, nb, interpret=interpret)
 
     return fn
+
+
+# ----------------------------------------------------------------------
+# Batched wave dispatch (the plan executor's path).
+#
+# Fronts of one wave are padded host-side to a common 128-aligned (mp, mp)
+# shape class and factored in ONE vmapped pallas_call — one dispatch per
+# shape class per wave instead of one per front.  Padding follows the same
+# unit-diagonal convention as ``_partial_cholesky_impl``: padded pivot
+# columns factor to e_j no-ops, so fronts with different true (m, nb) can
+# share a class as long as they round to the same (mp, nbp).
+# ----------------------------------------------------------------------
+def padded_shape(m: int, nb: int) -> Tuple[int, int]:
+    """(mp, nbp): the 128-aligned padded front order and pivot width."""
+    mb = m - nb
+    nbp = _round_up(max(nb, 1), TILE)
+    mbp = _round_up(mb, TILE) if mb > 0 else 0
+    return nbp + mbp, nbp
+
+
+def pad_front_np(front: np.ndarray, nb: int, dtype=None) -> np.ndarray:
+    """Host-side padding of an (m, m) front to its (mp, mp) shape class.
+
+    Pivots land in [0, nb), the border in [nbp, nbp+mb); everything else is
+    a unit diagonal.  Mirrors the in-jit padding of _partial_cholesky_impl
+    so the two paths are interchangeable.
+    """
+    m = front.shape[0]
+    mb = m - nb
+    mp, nbp = padded_shape(m, nb)
+    f = np.eye(mp, dtype=dtype or front.dtype)
+    f[:nb, :nb] = front[:nb, :nb]
+    if mb > 0:
+        f[nbp : nbp + mb, :nb] = front[nb:, :nb]
+        f[:nb, nbp : nbp + mb] = front[:nb, nb:]
+        f[nbp : nbp + mb, nbp : nbp + mb] = front[nb:, nb:]
+    return f
+
+
+def extract_panel_schur(
+    out: np.ndarray, m: int, nb: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Slice a factored padded front back to ((m, nb) panel, (m−nb)² schur).
+
+    Host-side analogue of the output gather in _partial_cholesky_impl:
+    zero the garbage above L11's diagonal, symmetrize the Schur block.
+    """
+    mb = m - nb
+    _, nbp = padded_shape(m, nb)
+    top = np.tril(out[:nb, :nb])
+    if mb > 0:
+        panel = np.concatenate([top, out[nbp : nbp + mb, :nb]], axis=0)
+        low = np.tril(out[nbp : nbp + mb, nbp : nbp + mb])
+        schur = low + low.T - np.diag(np.diag(low))
+    else:
+        panel = top
+        schur = np.zeros((0, 0), dtype=out.dtype)
+    return panel, schur
+
+
+@partial(jax.jit, static_argnames=("nbp", "interpret"))
+def _batched_front_factor(fronts: jax.Array, nbp: int, interpret: bool) -> jax.Array:
+    return jax.vmap(lambda f: front_factor_vmem(f, nbp, interpret=interpret))(fronts)
+
+
+def batched_front_factor(
+    fronts: jax.Array, nbp: int, interpret: Optional[bool] = None
+) -> jax.Array:
+    """Factor a (B, mp, mp) stack of padded fronts in one vmapped kernel.
+
+    Requires mp ≤ VMEM_FRONT_MAX (the executor routes larger fronts through
+    the per-front panel pipeline of ``partial_cholesky``).
+    """
+    b, mp, mp2 = fronts.shape
+    assert mp == mp2 and mp <= VMEM_FRONT_MAX and nbp % TILE == 0
+    return _batched_front_factor(fronts, nbp, _should_interpret(interpret))

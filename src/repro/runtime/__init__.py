@@ -4,6 +4,12 @@ from .elastic import (
     HeartbeatMonitor,
     run_elastic_schedule,
 )
+from .executor import (
+    ExecutionReport,
+    PlanExecutor,
+    TraceEvent,
+    execute_plan,
+)
 from .straggler import StragglerDetector, rebalance_two_pods
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -14,7 +14,15 @@ from .matrix import (
     permute_symmetric,
     random_spd,
 )
-from .multifrontal import Factorization, factorize, solve
+from .multifrontal import (
+    Factorization,
+    assemble_front_np,
+    extend_add_np,
+    factorize,
+    gather_front_entries,
+    lower_csc,
+    solve,
+)
 from .ordering import min_degree, nested_dissection_2d
 from .plan import ExecutionPlan, make_plan, pm_projected_makespan, replan_elastic
 from .symbolic import (

@@ -39,12 +39,13 @@ class Factorization:
         return l
 
 
-def _gather_front_entries(a: sp.csc_matrix, sn: Supernode) -> np.ndarray:
+def gather_front_entries(a: sp.csc_matrix, sn: Supernode) -> np.ndarray:
     """Dense (m, m) block with original entries of the pivot columns/rows.
 
     Only entries A[i, j] with j a pivot column and i in the front structure
     are owned by this front (each entry of A is assembled exactly once).
     Symmetric mirror is filled so the reference kernel sees a full block.
+    ``a`` must be the sorted CSC lower triangle (see ``lower_csc``).
     """
     m = sn.m
     f = np.zeros((m, m))
@@ -64,6 +65,39 @@ def _gather_front_entries(a: sp.csc_matrix, sn: Supernode) -> np.ndarray:
     return f
 
 
+def lower_csc(a: sp.csr_matrix) -> sp.csc_matrix:
+    """Sorted CSC lower triangle — the assembly-side view of A."""
+    acsc = sp.tril(a).tocsc()
+    acsc.sort_indices()
+    return acsc
+
+
+def extend_add_np(
+    f: np.ndarray, sn: Supernode, rows_c: np.ndarray, upd: np.ndarray
+) -> None:
+    """In-place extend-add of one child Schur complement into a front.
+
+    ``rows_c`` are the child's border rows in global indices; they are
+    located in the parent's structure by binary search (the symbolic phase
+    guarantees containment).
+    """
+    local = np.searchsorted(sn.rows, rows_c)
+    assert np.all(sn.rows[local] == rows_c), "child border not in front"
+    f[np.ix_(local, local)] += upd
+
+
+def assemble_front_np(
+    a: sp.csc_matrix,
+    sn: Supernode,
+    child_updates: List[Tuple[np.ndarray, np.ndarray]],
+) -> np.ndarray:
+    """Host-side front assembly: original entries + children's extend-add."""
+    f = gather_front_entries(a, sn)
+    for rows_c, upd in child_updates:
+        extend_add_np(f, sn, rows_c, upd)
+    return f
+
+
 def factorize(
     a: sp.csr_matrix,
     symb: SymbolicFactorization,
@@ -78,8 +112,7 @@ def factorize(
     to emulate scheduled execution.
     """
     factor_fn = factor_fn or partial_cholesky_ref
-    acsc = sp.tril(a).tocsc()
-    acsc.sort_indices()
+    acsc = lower_csc(a)
     ns = symb.n_supernodes
     order = list(range(ns)) if order is None else order
 
@@ -94,13 +127,10 @@ def factorize(
     for s in order:
         sn = symb.supernodes[s]
         assert all(done[c] for c in children[s]), "order violates precedence"
-        f_host = _gather_front_entries(acsc, sn)
+        f_host = assemble_front_np(
+            acsc, sn, [updates.pop(c) for c in children[s]]
+        )
         f = jnp.asarray(f_host)
-        for c in children[s]:
-            rows_c, upd = updates.pop(c)
-            local = np.searchsorted(sn.rows, rows_c)
-            assert np.all(sn.rows[local] == rows_c), "child border not in front"
-            f = f.at[np.ix_(local, local)].add(upd)
         panel, schur = factor_fn(f, sn.nb)
         panels[s] = np.asarray(panel)
         if sn.m > sn.nb:

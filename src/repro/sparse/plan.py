@@ -15,6 +15,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.baselines import proportional_shares
 from repro.core.graph import TaskTree
 from repro.core.multinode import discretize_shares_pow2
 from repro.core.pm import tree_equivalent_lengths, tree_pm_ratios
@@ -37,6 +38,7 @@ class ExecutionPlan:
     fluid_makespan: float  # PM optimum on the same device count (lower bound)
     total_devices: int
     alpha: float
+    strategy: str = "pm"  # share rule the groups were derived from
 
     def waves(self) -> List[List[PlannedTask]]:
         """Group tasks into maximal sets with identical start times."""
@@ -54,16 +56,29 @@ def make_plan(
     total_devices: int,
     alpha: float,
     min_devices: int = 1,
+    strategy: str = "pm",
 ) -> ExecutionPlan:
-    """List-schedule the tree with PM-guided discretized device groups.
+    """List-schedule the tree with discretized device groups.
 
     Greedy event-driven scheduler: a task is ready when its children are
-    done; ready tasks start (largest PM share first) whenever their device
+    done; ready tasks start (largest share first) whenever their device
     group fits in the free capacity.  Running time of task i on g devices is
     L_i / g^α.  This dominates the naive per-level wave model because
     independent subtrees overlap across levels exactly as PM prescribes.
+
+    ``strategy`` selects the share rule the device groups are derived from:
+    "pm" (the paper's α-aware eq^{1/α} split) or "proportional" (Pothen–Sun
+    subtree-weight split, §7's speedup-unaware baseline) — the executable
+    analogue of the §7 simulation comparison.  ``fluid_makespan`` stays the
+    PM optimum in both cases so ``efficiency()`` always measures distance to
+    the true lower bound.
     """
-    ratios = tree_pm_ratios(tree, alpha)
+    if strategy == "pm":
+        ratios = tree_pm_ratios(tree, alpha)
+    elif strategy == "proportional":
+        ratios = proportional_shares(tree, 1.0)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
     eq = tree_equivalent_lengths(tree, alpha)
     groups = discretize_shares_pow2(
         ratios, total_devices, min_devices, enforce_total=False
@@ -151,6 +166,7 @@ def make_plan(
         fluid_makespan=float(fluid),
         total_devices=total_devices,
         alpha=alpha,
+        strategy=strategy,
     )
 
 
@@ -186,7 +202,7 @@ def replan_elastic(
     residual = TaskTree(
         parent=tree.parent.copy(), lengths=remaining, labels=tree.labels.copy()
     )
-    return make_plan(residual, new_total_devices, alpha)
+    return make_plan(residual, new_total_devices, alpha, strategy=plan.strategy)
 
 
 def pm_projected_makespan(

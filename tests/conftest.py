@@ -6,6 +6,17 @@ os.environ.setdefault("XLA_FLAGS", "")
 import numpy as np
 import pytest
 
+# Property-test modules guard their hypothesis import with
+# ``pytest.importorskip("hypothesis")`` so a container without dev extras
+# (see requirements-dev.txt) skips them instead of erroring at collection.
+try:
+    from hypothesis import settings
+
+    settings.register_profile("repro", deadline=None, derandomize=True)
+    settings.load_profile("repro")
+except ImportError:
+    pass
+
 
 @pytest.fixture
 def rng():

@@ -1,6 +1,7 @@
 """Paper §6.2: subset-sum FPTAS and the (p,q)-scheduling FPTAS."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

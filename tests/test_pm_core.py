@@ -9,6 +9,7 @@ Property tests check the exact invariants the paper proves:
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

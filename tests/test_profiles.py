@@ -1,6 +1,7 @@
 """Step-profile properties (§4 p(t)) — the elastic-capacity foundation."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Profile

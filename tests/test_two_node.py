@@ -1,6 +1,7 @@
 """Paper §6.1: two homogeneous nodes — Algorithm 11 and its invariants."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
