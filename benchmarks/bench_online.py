@@ -1,0 +1,163 @@
+"""Online scheduling benchmark: the §7 strategy comparison, made dynamic.
+
+Three scenarios, all seeded/deterministic:
+
+1. *fidelity* — zero noise, single tree: the online scheduler must
+   reproduce the static PM plan's fluid makespan exactly (Theorem 6 —
+   re-sharing at every completion event IS the PM schedule).
+2. *noise* — lognormal duration noise, a batch of trees served one at a
+   time: online-PM (re-share at every event) vs the frozen baselines —
+   ``static`` (PM ratios frozen at admission, what a precomputed
+   ExecutionPlan does) and ``static-proportional`` (§7's Pothen–Sun
+   mapping).  Off-model durations leave frozen plans idling at sync
+   points; the event-driven re-share never idles.  Notably the frozen
+   *optimum* degrades more than the frozen heuristic: PM's
+   siblings-finish-together design is exactly what noise breaks.
+3. *arrivals* — a Poisson stream served concurrently (processor sharing
+   by Lemma-4 forest ratios) under the three admission policies (FIFO /
+   SJF-by-𝓛 / fair-share), reporting mean latency and pod utilization.
+
+``python -m benchmarks.bench_online [--smoke] [--out BENCH_online.json]``
+writes the machine-readable summary (mean-makespan ratios per policy,
+latencies per admission discipline) consumed by CI; ``benchmarks/run.py``
+does the same at the end of the full suite.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import random_assembly_tree, tree_equivalent_lengths
+from repro.online import (
+    LognormalNoise,
+    OnlineScheduler,
+    TreeRequest,
+    poisson_arrivals,
+    serve_trees,
+)
+
+ALPHA = 0.85
+NDEV = 32
+NOISE_SIGMA = 0.5
+SHARE_POLICIES = ("pm", "static", "static-proportional")
+ADMISSIONS = ("fifo", "sjf", "fair")
+
+
+def _trees(n_trees: int, n_nodes: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return [random_assembly_tree(n_nodes, rng) for _ in range(n_trees)]
+
+
+def run(json_path: Optional[str] = None, smoke: bool = False) -> List[Dict]:
+    n_trees, n_nodes = (4, 20) if smoke else (10, 40)
+    rows: List[Dict] = []
+    payload: Dict = {
+        "alpha": ALPHA,
+        "devices": NDEV,
+        "noise_sigma": NOISE_SIGMA,
+        "n_trees": n_trees,
+        "n_nodes": n_nodes,
+    }
+
+    # 1. fidelity: zero noise reproduces the fluid PM makespan
+    tree = _trees(1, n_nodes, seed=0)[0]
+    t0 = time.time()
+    sched = OnlineScheduler(NDEV, ALPHA)
+    sched.submit(tree)
+    rep = sched.run()
+    us = (time.time() - t0) * 1e6
+    rep.validate()
+    fluid = tree_equivalent_lengths(tree, ALPHA)[tree.root] / NDEV**ALPHA
+    fid = rep.makespan / fluid
+    payload["fidelity_online_over_fluid"] = fid
+    rows.append(
+        {
+            "name": "online_fidelity",
+            "us_per_call": round(us, 1),
+            "derived": f"online/fluid={fid:.9f} events={rep.n_events}",
+        }
+    )
+
+    # 2. duration noise: online-PM vs frozen baselines (sequential FIFO
+    #    service so only the share rule differs)
+    trees = _trees(n_trees, n_nodes, seed=1)
+    noise = LognormalNoise(NOISE_SIGMA, seed=2)
+    mean_mk: Dict[str, float] = {}
+    for policy in SHARE_POLICIES:
+        reqs = [TreeRequest(t, arrival=0.0, rid=i) for i, t in enumerate(trees)]
+        t0 = time.time()
+        rep = serve_trees(
+            reqs, NDEV, ALPHA, policy=policy, admission="fifo",
+            max_concurrent=1, noise=noise,
+        )
+        us = (time.time() - t0) * 1e6
+        rep.validate()
+        mean_mk[policy] = rep.mean_service()
+        rows.append(
+            {
+                "name": f"online_noise_{policy}",
+                "us_per_call": round(us, 1),
+                "derived": (
+                    f"mean_makespan={rep.mean_service():.4f}"
+                    f" util={rep.utilization:.3f}"
+                    f" reshares={rep.n_reshares}"
+                ),
+            }
+        )
+    payload["mean_makespan"] = mean_mk
+    payload["ratios"] = {
+        "static_over_pm": mean_mk["static"] / mean_mk["pm"],
+        "proportional_over_pm": mean_mk["static-proportional"] / mean_mk["pm"],
+    }
+
+    # 3. Poisson arrivals, concurrent sharing, admission policies.  Tree
+    #    sizes are deliberately mixed so SJF-by-𝓛 has variance to exploit.
+    rng = np.random.default_rng(4)
+    sizes = rng.integers(n_nodes // 4, 2 * n_nodes, size=n_trees)
+    mixed = [random_assembly_tree(int(m), rng) for m in sizes]
+    arrivals = poisson_arrivals(n_trees, 0.5, seed=3)
+    lat: Dict[str, float] = {}
+    for adm in ADMISSIONS:
+        reqs = [
+            TreeRequest(t, arrival=float(a), tenant=i % 3, rid=i)
+            for i, (t, a) in enumerate(zip(mixed, arrivals))
+        ]
+        t0 = time.time()
+        rep = serve_trees(
+            reqs, NDEV, ALPHA, policy="pm", admission=adm,
+            max_concurrent=2, noise=noise,
+        )
+        us = (time.time() - t0) * 1e6
+        rep.validate()
+        lat[adm] = rep.mean_latency()
+        rows.append(
+            {
+                "name": f"online_arrivals_{adm}",
+                "us_per_call": round(us, 1),
+                "derived": (
+                    f"mean_latency={rep.mean_latency():.4f}"
+                    f" makespan={rep.makespan:.4f}"
+                    f" util={rep.utilization:.3f}"
+                ),
+            }
+        )
+    payload["mean_latency"] = lat
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    ap.add_argument("--out", default="BENCH_online.json")
+    args = ap.parse_args()
+    for r in run(json_path=args.out, smoke=args.smoke):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

@@ -1,12 +1,16 @@
 """Benchmark harness: one module per paper table/figure (+ system benches).
 
-Prints ``name,us_per_call,derived`` CSV.  The roofline table itself comes
-from the dry-run artifacts (results/dryrun) and is summarized by
-``python -m benchmarks.roofline_table``.
+Prints ``name,us_per_call,derived`` CSV.  The online-scheduling bench
+additionally writes its machine-readable summary (makespan ratios per
+policy, latencies per admission discipline) to ``BENCH_online.json``.
+The roofline table itself comes from the dry-run artifacts
+(results/dryrun) and is summarized by ``python -m benchmarks.roofline_table``.
 """
 from __future__ import annotations
 
 import sys
+
+ONLINE_JSON = "BENCH_online.json"
 
 
 def main() -> None:
@@ -17,6 +21,7 @@ def main() -> None:
         bench_fptas,
         bench_kernel,
         bench_moe_pm,
+        bench_online,
         bench_simulations,
         bench_two_node,
     )
@@ -24,6 +29,7 @@ def main() -> None:
     modules = [
         ("alpha_calibration (S3, Tables 1-2)", bench_alpha_calibration),
         ("simulations (S7, Figures 13-14)", bench_simulations),
+        ("online (S7 dynamic: PM vs static vs proportional)", bench_online),
         ("two_node (S6.1, Theorem 8)", bench_two_node),
         ("fptas (S6.2, Corollary 19)", bench_fptas),
         ("discretization (DESIGN S7 adaptation)", bench_discretization),
@@ -34,7 +40,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for title, mod in modules:
         print(f"# --- {title}", file=sys.stderr)
-        for r in mod.run():
+        kwargs = {"json_path": ONLINE_JSON} if mod is bench_online else {}
+        for r in mod.run(**kwargs):
             print(f"{r['name']},{r['us_per_call']},{r['derived']}")
             sys.stdout.flush()
 

@@ -4,6 +4,7 @@ JAX framework.
 
 Sub-packages:
   core         the paper: PM optimal schedule, Alg 11, Alg 12, baselines, §7
+  online       event-driven online scheduler (state machine, admission, replay)
   sparse       multifrontal Cholesky (the paper's application) + PM planning
   kernels      Pallas TPU kernels (frontal partial Cholesky, flash attention)
   models       the 10 assigned architectures (train/prefill/decode)

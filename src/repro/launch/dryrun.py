@@ -204,6 +204,8 @@ def run_cell(
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     summary = hlo_analyze(hlo)
 

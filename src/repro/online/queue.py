@@ -1,0 +1,151 @@
+"""Multi-tenant admission queue: factorization trees as a service.
+
+The scheduler shares the live pool among *admitted* trees (PM over the
+forest — a parallel composition, Lemma 4 at the virtual root).  The
+admission queue decides which pending trees are admitted and when:
+
+* ``fifo``   — arrival order.
+* ``sjf``    — shortest job first by PM *equivalent length* 𝓛 (Def. 1):
+  the correct "size" of a malleable tree is its eq-length, not its total
+  work — a deep chain is long even if its Σ L_i is small.
+* ``fair``   — fair share across tenants: admit the pending tree of the
+  tenant with the least accumulated service (∫ share dt), FIFO within a
+  tenant.
+
+``max_concurrent`` bounds the number of simultaneously admitted trees
+(processor-sharing degree); ``1`` serves trees one at a time on the
+whole pool.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.graph import TaskTree
+
+POLICIES = ("fifo", "sjf", "fair")
+
+
+@dataclass
+class TreeRequest:
+    """One request of the serving stream."""
+
+    tree: TaskTree
+    arrival: float = 0.0
+    tenant: int = 0
+    rid: Optional[int] = None
+
+
+@dataclass
+class _Pending:
+    tree_id: int
+    tenant: int
+    eq: float
+    seq: int
+
+
+class AdmissionQueue:
+    """Pending-tree queue with a pluggable admission policy."""
+
+    def __init__(
+        self, policy: str = "fifo", max_concurrent: Optional[int] = None
+    ) -> None:
+        if policy not in POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}")
+        if max_concurrent is not None and max_concurrent < 1:
+            raise ValueError("max_concurrent must be >= 1")
+        self.policy = policy
+        self.max_concurrent = max_concurrent
+        self._pending: List[_Pending] = []
+        self._seq = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def __bool__(self) -> bool:
+        return bool(self._pending)
+
+    def push(self, tree_id: int, tenant: int, eq: float) -> None:
+        self._pending.append(
+            _Pending(tree_id, tenant, float(eq), next(self._seq))
+        )
+
+    def can_admit(self, n_admitted: int) -> bool:
+        if not self._pending:
+            return False
+        return (
+            self.max_concurrent is None or n_admitted < self.max_concurrent
+        )
+
+    def pop_next(
+        self, service_by_tenant: Optional[Dict[int, float]] = None
+    ) -> _Pending:
+        """Remove and return the next tree to admit under the policy."""
+        if not self._pending:
+            raise IndexError("admission queue is empty")
+        if self.policy == "fifo":
+            key = lambda p: (p.seq,)
+        elif self.policy == "sjf":
+            key = lambda p: (p.eq, p.seq)
+        else:  # fair
+            svc = service_by_tenant or {}
+            key = lambda p: (svc.get(p.tenant, 0.0), p.seq)
+        best = min(range(len(self._pending)), key=lambda j: key(self._pending[j]))
+        return self._pending.pop(best)
+
+
+def serve_trees(
+    requests: Sequence[TreeRequest],
+    n_devices: int,
+    alpha: float,
+    *,
+    policy: str = "pm",
+    admission: str = "fifo",
+    max_concurrent: Optional[int] = None,
+    noise=None,
+    speedup_floor: bool = False,
+):
+    """Serve a stream of tree requests; returns the :class:`OnlineReport`.
+
+    ``policy`` is the share rule (pm / proportional / static — see
+    OnlineScheduler); ``admission`` the queue discipline.  Static share
+    plans cannot overlap trees (frozen shares of two trees would break
+    the §4 resource bound), so ``static`` forces ``max_concurrent=1``.
+    """
+    from .scheduler import OnlineScheduler  # deferred: queue ← scheduler
+
+    if policy.startswith("static"):
+        max_concurrent = 1
+    sched = OnlineScheduler(
+        n_devices,
+        alpha,
+        policy=policy,
+        noise=noise,
+        speedup_floor=speedup_floor,
+        admission=AdmissionQueue(admission, max_concurrent),
+    )
+    for req in requests:
+        sched.submit(
+            req.tree, at=req.arrival, tenant=req.tenant, rid=req.rid
+        )
+    return sched.run()
+
+
+def poisson_arrivals(
+    n: int, mean_interarrival: float, seed: int = 0
+) -> np.ndarray:
+    """Seeded Poisson-process arrival times for benchmark streams."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(mean_interarrival, size=n))
+
+
+__all__ = [
+    "POLICIES",
+    "AdmissionQueue",
+    "TreeRequest",
+    "poisson_arrivals",
+    "serve_trees",
+]

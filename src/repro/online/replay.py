@@ -1,0 +1,123 @@
+"""Replay bridge: an online run drives the real wave executor.
+
+The online scheduler reasons in fluid shares; the wave executor
+(`repro.runtime.executor`) consumes a discretized
+:class:`~repro.sparse.plan.ExecutionPlan`.  This module closes the gap:
+run a factorization tree through :class:`OnlineScheduler`, snapshot each
+task's (start, end, mean share) from the emitted schedule, round shares
+to power-of-two device groups, and hand the result to
+:class:`~repro.runtime.executor.PlanExecutor` for a real (interpret-mode
+on CPU) factorization.  Precedence is inherited from the online run —
+a parent's start *is* the completion event of its last child — so the
+executor's wave walk stays valid by construction (waves are grouped with
+the tolerance rule of ``ExecutionPlan.waves``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import scipy.sparse as sp
+
+from repro.core.graph import TaskTree
+from repro.core.pm import tree_equivalent_lengths
+from repro.sparse.plan import ExecutionPlan, PlannedTask
+from repro.sparse.symbolic import SymbolicFactorization
+
+from .scheduler import OnlineReport, OnlineScheduler
+
+
+def _pow2_devices(share: float, total: int) -> int:
+    """Nearest power-of-two device count for a fluid share, in [1, total]."""
+    if share <= 0:
+        return 1
+    g = 2 ** int(round(math.log2(max(share, 1.0))))
+    return int(min(max(g, 1), total))
+
+
+def plan_from_online(
+    tree: TaskTree,
+    report: OnlineReport,
+    total_devices: int,
+    *,
+    tree_id: int = 0,
+) -> ExecutionPlan:
+    """Project one tree's online run onto an ExecutionPlan.
+
+    Task start/end times are the online event times; device groups are
+    the power-of-two rounding of the task's time-averaged share.  The
+    plan's ``fluid_makespan`` stays the PM optimum on ``total_devices``
+    so ``efficiency()`` still measures distance to the true bound.
+    """
+    run = report.runs[tree_id]
+    alpha = report.alpha
+    tasks = []
+    for i, t_start, t_done, mean_share in report.task_records(tree_id):
+        zero = tree.lengths[i] <= 0
+        tasks.append(
+            PlannedTask(
+                task=i,
+                label=int(tree.labels[i]),
+                devices=0 if zero else _pow2_devices(mean_share, total_devices),
+                start=float(t_start),
+                end=float(t_done),
+            )
+        )
+    tasks.sort(key=lambda t: (t.start, t.task))
+    eq = tree_equivalent_lengths(tree, alpha)[tree.root]
+    return ExecutionPlan(
+        tasks=tasks,
+        makespan=float(run.future.t_done - run.future.t_admit),
+        fluid_makespan=float(eq / total_devices**alpha),
+        total_devices=int(total_devices),
+        alpha=alpha,
+        strategy=f"online-{report.policy}",
+    )
+
+
+def run_online_plan(
+    tree: TaskTree,
+    total_devices: int,
+    alpha: float,
+    *,
+    policy: str = "pm",
+    noise=None,
+    speedup_floor: bool = False,
+) -> Tuple[ExecutionPlan, OnlineReport]:
+    """Run one tree online on ``total_devices`` and project the plan."""
+    sched = OnlineScheduler(
+        total_devices,
+        alpha,
+        policy=policy,
+        noise=noise,
+        speedup_floor=speedup_floor,
+    )
+    sched.submit(tree)
+    report = sched.run()
+    return plan_from_online(tree, report, total_devices), report
+
+
+def execute_online(
+    a: sp.csr_matrix,
+    symb: SymbolicFactorization,
+    total_devices: int,
+    alpha: float,
+    *,
+    policy: str = "pm",
+    noise=None,
+    **executor_kwargs,
+):
+    """Factorize ``a`` through the online scheduler: online run → plan →
+    wave executor.  Returns (Factorization, ExecutionReport, OnlineReport).
+    """
+    from repro.runtime.executor import PlanExecutor  # deferred: jax import
+
+    tree = symb.task_tree()
+    plan, online_report = run_online_plan(
+        tree, total_devices, alpha, policy=policy, noise=noise
+    )
+    fact, exec_report = PlanExecutor(symb, plan, **executor_kwargs).run(a)
+    return fact, exec_report, online_report
+
+
+__all__ = ["execute_online", "plan_from_online", "run_online_plan"]

@@ -2,6 +2,7 @@ from .elastic import (
     ElasticController,
     ElasticEvent,
     HeartbeatMonitor,
+    run_elastic_online,
     run_elastic_schedule,
 )
 from .executor import (
@@ -10,6 +11,6 @@ from .executor import (
     TraceEvent,
     execute_plan,
 )
-from .straggler import StragglerDetector, rebalance_two_pods
+from .straggler import StragglerDetector, StragglerInjector, rebalance_two_pods
 
 __all__ = [k for k in dir() if not k.startswith("_")]

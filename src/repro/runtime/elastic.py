@@ -25,6 +25,7 @@ import numpy as np
 from repro.core.graph import TaskTree
 from repro.core.pm import tree_equivalent_lengths
 from repro.core.profiles import Profile
+from repro.online.events import EventQueue, SetCapacity
 from repro.sparse.plan import ExecutionPlan, make_plan, replan_elastic
 
 
@@ -84,6 +85,15 @@ class ElasticController:
         eq = tree_equivalent_lengths(tree, alpha)
         return self.profile().time_for_work(eq[tree.root], alpha)
 
+    def online_events(self) -> List[Tuple[float, SetCapacity]]:
+        """The capacity history as online-scheduler events, ready to
+        ``OnlineScheduler.inject`` (the fault-tolerance path now runs
+        through the discrete-event core)."""
+        return [
+            (ev.time, SetCapacity(float(ev.devices)))
+            for ev in sorted(self.events, key=lambda e: e.time)
+        ]
+
 
 # ----------------------------------------------------------------------
 def run_elastic_schedule(
@@ -94,34 +104,58 @@ def run_elastic_schedule(
 ) -> Tuple[float, List[ExecutionPlan]]:
     """Discretized execution under capacity events: plan, execute until the
     next event, replan the residual on the new capacity.  Returns the total
-    makespan and the plan sequence."""
+    makespan and the plan sequence.  The failure trace is drained through
+    the online event core's heap (repro.online.events) — same event
+    plumbing as the fluid online scheduler, discretized plans on top."""
     plans: List[ExecutionPlan] = []
     t_global = 0.0
     devices = initial_devices
     remaining = tree
-    events = sorted(failures, key=lambda e: e.time)
-    k = 0
+    queue = EventQueue()
+    for ev in failures:
+        queue.push(ev.time, SetCapacity(float(ev.devices)))
     guard = 0
     while True:
         guard += 1
-        if guard > len(events) + 10:
+        if guard > len(failures) + 10:
             raise RuntimeError("elastic loop did not converge")
         plan = make_plan(remaining, devices, alpha)
         plans.append(plan)
         end = t_global + plan.makespan
-        if k < len(events) and events[k].time < end:
-            ev = events[k]
-            k += 1
+        if queue and queue.peek_time() < end:
+            ev = queue.pop()
             # execute until the event, then rebuild residual work
             local_t = ev.time - t_global
             residual = _residual_tree(remaining, plan, local_t)
             t_global = ev.time
-            devices = ev.devices
+            devices = int(ev.payload.capacity)
             remaining = residual
             if remaining.lengths.sum() <= 1e-12:
                 return t_global, plans
         else:
             return end, plans
+
+
+def run_elastic_online(
+    tree: TaskTree,
+    alpha: float,
+    initial_devices: int,
+    failures: List[ElasticEvent],
+    **scheduler_kwargs,
+):
+    """Fluid counterpart of :func:`run_elastic_schedule`: the same failure
+    trace injected into the online event-driven scheduler.  With zero
+    noise the returned makespan equals the Theorem-6 work-time inversion
+    (``ElasticController.pm_makespan``) — ratio invariance, observed
+    through the event core.  Returns (makespan, OnlineReport)."""
+    from repro.online.scheduler import OnlineScheduler
+
+    sched = OnlineScheduler(initial_devices, alpha, **scheduler_kwargs)
+    sched.submit(tree)
+    for ev in failures:
+        sched.inject(ev.time, SetCapacity(float(ev.devices)))
+    report = sched.run()
+    return report.makespan, report
 
 
 def _residual_tree(tree: TaskTree, plan: ExecutionPlan, t: float) -> TaskTree:
@@ -143,5 +177,6 @@ __all__ = [
     "ElasticEvent",
     "HeartbeatMonitor",
     "replan_elastic",
+    "run_elastic_online",
     "run_elastic_schedule",
 ]

@@ -13,11 +13,12 @@ the malleable tasks accordingly.  This is exactly the paper's perspective
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.hetero import hetero_fptas
+from repro.online.events import SetNodeSpeed
 
 
 @dataclass
@@ -56,6 +57,40 @@ class StragglerDetector:
             for i, v in times.items()
             if 0.6745 * (v - med) / mad > self.threshold
         ]
+
+
+@dataclass
+class StragglerInjector:
+    """Bridge detector → online scheduler: straggler observations become
+    SetNodeSpeed events in the discrete-event core, so mitigation is the
+    same O(n) Lemma-4 re-share every other runtime event gets (instead of
+    this module's ad-hoc two-pod rebalancing loop).
+
+    ``emit(t)`` returns the speed edits newly implied by the detector's
+    state at time ``t`` (only changes are emitted, so repeated polling is
+    idempotent); ``inject(scheduler, t)`` pushes them into a scheduler.
+    """
+
+    detector: StragglerDetector
+    tol: float = 0.05  # suppress sub-5% speed jitter
+    _last: Dict[int, float] = field(default_factory=dict)
+
+    def emit(self, t: float) -> List[Tuple[float, SetNodeSpeed]]:
+        speeds = self.detector.node_speeds()
+        out: List[Tuple[float, SetNodeSpeed]] = []
+        for node in range(self.detector.n_nodes):
+            s = float(min(speeds[node], 1.0))
+            if abs(s - self._last.get(node, 1.0)) > self.tol:
+                self._last[node] = s
+                out.append((t, SetNodeSpeed(node, s)))
+        return out
+
+    def inject(self, scheduler, t: float) -> int:
+        """Push the pending speed edits; returns how many were emitted."""
+        evs = self.emit(t)
+        for at, payload in evs:
+            scheduler.inject(at, payload)
+        return len(evs)
 
 
 def rebalance_two_pods(

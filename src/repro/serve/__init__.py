@@ -1,3 +1,8 @@
-from .pod_scheduler import Request, place_two_pods, place_two_pods_equal
+from .pod_scheduler import (
+    Request,
+    place_two_pods,
+    place_two_pods_equal,
+    serve_online,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

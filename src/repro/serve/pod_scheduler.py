@@ -1,16 +1,25 @@
-"""Two-pod request placement — §6 applied to serving.
+"""Pod-level request scheduling — §6 and the online subsystem, serving.
 
 Requests (prefill jobs, or whole factorization trees) are malleable tasks
-that must not span pods (constraint 𝓡 at the ICI/DCN boundary).  For two
-equal pods we use Algorithm 11 (trees) / the Lemma-10 greedy (independent
-requests); for unequal pods (a degraded pod after failures, or mixed
-generations) the Algorithm-12 FPTAS.  Request cost model: prefill flops
-≈ 2·N_active·prompt_tokens.
+that must not span pods (constraint 𝓡 at the ICI/DCN boundary).  Two
+modes:
+
+* **batch placement** — a fixed request set split across two pods: for
+  equal pods Algorithm 11 (trees) / the Lemma-10 greedy (independent
+  requests); for unequal pods (a degraded pod after failures, or mixed
+  generations) the Algorithm-12 FPTAS.
+* **online serving** (:func:`serve_online`) — a *stream* of requests with
+  arrival times, served by the event-driven online scheduler through a
+  multi-tenant admission queue (FIFO / SJF / fair-share): each admitted
+  request is a malleable task sharing the pod by Lemma-4 ratios, and the
+  report carries per-request latency plus pod utilization.
+
+Request cost model: prefill flops ≈ 2·N_active·prompt_tokens.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -18,6 +27,7 @@ from repro.core.hetero import hetero_fptas, partition_makespan
 from repro.core.trees import star_tree
 from repro.core.two_node import homogeneous_two_node
 from repro.models.config import ModelConfig
+from repro.online.queue import TreeRequest, serve_trees
 
 
 @dataclass
@@ -47,6 +57,53 @@ def place_two_pods_equal(
     # nodes; node 0 is the virtual root.
     placement = [res.placement[i + 1] for i in range(len(requests))]
     return res.makespan, placement
+
+
+def serve_online(
+    cfg: ModelConfig,
+    requests: Sequence[Request],
+    arrivals: Sequence[float],
+    pod_devices: int,
+    alpha: float,
+    *,
+    tenants: Optional[Sequence[int]] = None,
+    policy: str = "pm",
+    admission: str = "sjf",
+    max_concurrent: Optional[int] = 4,
+    flop_rate: float = 1e12,
+    noise=None,
+):
+    """Online mode: serve a request stream on one pod via the event core.
+
+    Each request is a single malleable task (length = prefill flops /
+    ``flop_rate``, so times are seconds at a ``flop_rate``-flops/s
+    device).  Admitted requests share the pod by PM ratios; the admission
+    queue (``fifo`` / ``sjf`` / ``fair``) orders the backlog.  Returns
+    the :class:`~repro.online.scheduler.OnlineReport`; per-request
+    latency is ``report.futures[i].latency`` keyed by submission order
+    (``rid`` carries the request id).
+    """
+    from repro.core.graph import TaskTree
+
+    lengths = request_lengths(cfg, requests) / float(flop_rate)
+    reqs = [
+        TreeRequest(
+            tree=TaskTree(parent=np.array([-1]), lengths=np.array([L])),
+            arrival=float(a),
+            tenant=int(tenants[i]) if tenants is not None else 0,
+            rid=r.rid,
+        )
+        for i, (r, L, a) in enumerate(zip(requests, lengths, arrivals))
+    ]
+    return serve_trees(
+        reqs,
+        pod_devices,
+        alpha,
+        policy=policy,
+        admission=admission,
+        max_concurrent=max_concurrent,
+        noise=noise,
+    )
 
 
 def place_two_pods(

@@ -40,12 +40,24 @@ class ExecutionPlan:
     alpha: float
     strategy: str = "pm"  # share rule the groups were derived from
 
-    def waves(self) -> List[List[PlannedTask]]:
-        """Group tasks into maximal sets with identical start times."""
-        by_start: Dict[float, List[PlannedTask]] = {}
-        for t in self.tasks:
-            by_start.setdefault(t.start, []).append(t)
-        return [by_start[k] for k in sorted(by_start)]
+    def waves(self, rtol: float = 1e-9, atol: float = 1e-12) -> List[List[PlannedTask]]:
+        """Group tasks into maximal sets with equal start times.
+
+        Equality is tolerance-based: starts within
+        ``max(atol, rtol·makespan)`` of a wave's *first* task join that
+        wave, so accumulated float error in chained start times (or an
+        online replay's event timestamps) cannot split a wave.  Anchoring
+        at the first task keeps the tolerance from chaining across
+        genuinely distinct waves.
+        """
+        tol = max(atol, rtol * max(self.makespan, 0.0))
+        out: List[List[PlannedTask]] = []
+        for t in sorted(self.tasks, key=lambda t: (t.start, t.task)):
+            if out and t.start - out[-1][0].start <= tol:
+                out[-1].append(t)
+            else:
+                out.append([t])
+        return out
 
     def efficiency(self) -> float:
         return self.fluid_makespan / self.makespan if self.makespan > 0 else 1.0

@@ -1,0 +1,368 @@
+"""Online scheduler: §4 validity under random event traces, fluid-bound
+optimality, fidelity to the static PM plan, queue policies, event-core
+rewiring of elastic/straggler, and the replay bridge."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    Profile,
+    chain_tree,
+    random_assembly_tree,
+    star_tree,
+    tree_equivalent_lengths,
+)
+from repro.online import (
+    AdmissionQueue,
+    LognormalNoise,
+    OnlineFailure,
+    OnlineScheduler,
+    ProcessorPool,
+    SetCapacity,
+    SetNodeSpeed,
+    TaskFailure,
+    TreeRequest,
+    plan_from_online,
+    poisson_arrivals,
+    run_online_plan,
+    serve_trees,
+)
+from repro.runtime import (
+    ElasticController,
+    ElasticEvent,
+    StragglerDetector,
+    StragglerInjector,
+    run_elastic_online,
+    run_elastic_schedule,
+)
+from repro.sparse.plan import ExecutionPlan, PlannedTask
+
+ALPHA = 0.9
+NDEV = 64
+
+
+# ----------------------------------------------------------------------
+# Acceptance: fidelity to the static PM plan (Theorem 6, made online)
+# ----------------------------------------------------------------------
+def test_zero_noise_single_tree_reproduces_pm_fluid(rng):
+    """Zero noise, one tree: the event loop's O(n) re-shares reproduce
+    the unique PM optimum — makespan 𝓛/p^α to 1e-6 relative, and the
+    emitted ExplicitSchedule passes all three §4 predicates."""
+    for n in (1, 7, 50, 150):
+        tree = random_assembly_tree(n, rng)
+        sched = OnlineScheduler(NDEV, ALPHA)
+        fut = sched.submit(tree)
+        report = sched.run()
+        fluid = tree_equivalent_lengths(tree, ALPHA)[tree.root] / NDEV**ALPHA
+        assert report.makespan == pytest.approx(fluid, rel=1e-6)
+        assert fut.state == "done"
+        report.validate()  # §4: resource + completeness + precedence
+
+
+def test_zero_noise_chain_and_star(rng):
+    # chain: PM degenerates to whole-machine sequential
+    tree = chain_tree(12)
+    report_mk = OnlineScheduler(8, ALPHA)
+    report_mk.submit(tree)
+    mk = report_mk.run().makespan
+    assert mk == pytest.approx(12.0 / 8**ALPHA, rel=1e-9)
+    # star with zero-length root: instant virtual tasks don't stall
+    tree = star_tree(rng.uniform(1, 3, size=6))
+    sched = OnlineScheduler(8, ALPHA)
+    sched.submit(tree)
+    rep = sched.run()
+    rep.validate()
+    eq = tree_equivalent_lengths(tree, ALPHA)[tree.root]
+    assert rep.makespan == pytest.approx(eq / 8**ALPHA, rel=1e-9)
+
+
+# ----------------------------------------------------------------------
+# §4 validity + lower bound under random event traces (satellite)
+# ----------------------------------------------------------------------
+def test_schedule_valid_under_random_event_traces():
+    """Seeded random traces: noise + capacity events + node slowdowns.
+    The emitted schedule must satisfy resource/completeness/precedence
+    against the *realized* lengths and recorded p(t), and the makespan
+    can never beat the Theorem-6 fluid bound of the realized forest."""
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        tree = random_assembly_tree(int(rng.integers(10, 60)), rng)
+        sched = OnlineScheduler(
+            ProcessorPool(16),
+            ALPHA,
+            noise=LognormalNoise(0.5, seed=seed),
+        )
+        sched.submit(tree)
+        t = 0.0
+        for _ in range(int(rng.integers(1, 5))):
+            t += float(rng.uniform(0.05, 0.5))
+            if rng.random() < 0.5:
+                sched.inject(t, SetCapacity(float(rng.integers(4, 17))))
+            else:
+                sched.inject(
+                    t,
+                    SetNodeSpeed(int(rng.integers(0, 16)), float(rng.uniform(0, 1))),
+                )
+        report = sched.run()
+        assert all(f.state == "done" for f in report.futures.values())
+        report.validate()
+        assert report.makespan >= report.fluid_lower_bound() - 1e-9
+
+
+def test_multitree_arrivals_valid_and_bounded(rng):
+    trees = [random_assembly_tree(25, rng) for _ in range(5)]
+    arrivals = poisson_arrivals(5, 0.4, seed=7)
+    reqs = [
+        TreeRequest(t, arrival=float(a), tenant=i % 2, rid=i)
+        for i, (t, a) in enumerate(zip(trees, arrivals))
+    ]
+    report = serve_trees(
+        reqs, 32, ALPHA, admission="fifo", max_concurrent=2,
+        noise=LognormalNoise(0.4, seed=1),
+    )
+    report.validate()
+    for k, fut in report.futures.items():
+        assert fut.state == "done"
+        # even alone on the pool from admission a tree can't beat its
+        # own PM fluid optimum
+        assert fut.t_done >= report.tree_lower_bound(k) - 1e-9
+        assert fut.latency >= fut.service - 1e-12
+    assert 0 < report.utilization <= 1 + 1e-9
+
+
+# ----------------------------------------------------------------------
+# Share policies: online-PM vs frozen baselines (bench acceptance, mini)
+# ----------------------------------------------------------------------
+def test_online_pm_beats_frozen_baselines_under_noise(rng):
+    trees = [random_assembly_tree(35, rng) for _ in range(6)]
+    noise = LognormalNoise(0.5, seed=11)
+    mean = {}
+    for policy in ("pm", "static", "static-proportional"):
+        reqs = [TreeRequest(t, arrival=0.0, rid=i) for i, t in enumerate(trees)]
+        rep = serve_trees(
+            reqs, 32, 0.85, policy=policy, admission="fifo",
+            max_concurrent=1, noise=noise,
+        )
+        rep.validate()
+        mean[policy] = rep.mean_service()
+    assert mean["pm"] < mean["static"]
+    assert mean["pm"] < mean["static-proportional"]
+
+
+def test_static_policy_forces_sequential_service(rng):
+    sched = OnlineScheduler(
+        16, ALPHA, policy="static", admission=AdmissionQueue("fifo", 4)
+    )
+    assert sched.admission.max_concurrent == 1
+
+
+# ----------------------------------------------------------------------
+# Admission queue policies
+# ----------------------------------------------------------------------
+def test_sjf_admits_by_equivalent_length(rng):
+    trees = [random_assembly_tree(n, rng) for n in (60, 8, 30)]
+    reqs = [TreeRequest(t, arrival=0.0, rid=i) for i, t in enumerate(trees)]
+    rep = serve_trees(reqs, 32, ALPHA, admission="sjf", max_concurrent=1)
+    admit_order = sorted(rep.futures, key=lambda k: rep.futures[k].t_admit)
+    eq_order = sorted(rep.eq_nominal, key=rep.eq_nominal.get)
+    assert admit_order == eq_order
+    # and SJF cannot hurt mean latency vs FIFO here
+    reqs = [TreeRequest(t, arrival=0.0, rid=i) for i, t in enumerate(trees)]
+    fifo = serve_trees(reqs, 32, ALPHA, admission="fifo", max_concurrent=1)
+    assert rep.mean_latency() <= fifo.mean_latency() + 1e-9
+
+
+def test_fair_share_prefers_starved_tenant(rng):
+    reqs = [
+        TreeRequest(random_assembly_tree(25, rng), 0.0, tenant=0, rid=i)
+        for i in range(3)
+    ]
+    late = TreeRequest(random_assembly_tree(25, rng), 0.3, tenant=1, rid=9)
+    t_done = {}
+    for adm in ("fifo", "fair"):
+        rep = serve_trees(
+            [*reqs, late], 32, ALPHA, admission=adm, max_concurrent=1
+        )
+        t_done[adm] = [
+            f.t_done for f in rep.futures.values() if f.tenant == 1
+        ][0]
+    assert t_done["fair"] < t_done["fifo"]
+
+
+def test_fifo_preserves_arrival_order(rng):
+    trees = [random_assembly_tree(20, rng) for _ in range(4)]
+    reqs = [
+        TreeRequest(t, arrival=0.1 * i, rid=i) for i, t in enumerate(trees)
+    ]
+    rep = serve_trees(reqs, 16, ALPHA, admission="fifo", max_concurrent=1)
+    admits = [rep.futures[k].t_admit for k in sorted(rep.futures)]
+    assert admits == sorted(admits)
+
+
+# ----------------------------------------------------------------------
+# Failures: the state machine's failed path
+# ----------------------------------------------------------------------
+def test_task_failure_with_retry_completes(rng):
+    tree = random_assembly_tree(20, rng)
+    big = int(np.argmax(tree.lengths))
+    base = OnlineScheduler(16, ALPHA)
+    base.submit(tree)
+    mk_clean = base.run().makespan
+    sched = OnlineScheduler(16, ALPHA)
+    fut = sched.submit(tree)
+    sched.inject(mk_clean * 0.2, TaskFailure(0, big, retry=True))
+    report = sched.run()
+    assert fut.state == "done"
+    report.validate()  # redone work still satisfies completeness
+    assert report.makespan >= mk_clean - 1e-9  # lost work can't help
+
+
+def test_task_failure_without_retry_fails_future(rng):
+    tree = random_assembly_tree(20, rng)
+    sched = OnlineScheduler(16, ALPHA)
+    fut = sched.submit(tree)
+    sched.inject(1e-3, TaskFailure(0, int(np.argmax(tree.lengths)), retry=False))
+    report = sched.run()
+    assert fut.state == "failed"
+    with pytest.raises(OnlineFailure):
+        fut.result()
+    report.validate()  # failed tree excluded from completeness
+
+
+# ----------------------------------------------------------------------
+# Event-core rewiring: elastic + straggler
+# ----------------------------------------------------------------------
+def test_elastic_online_matches_theorem6_inversion(rng):
+    """Ratio invariance through the event core: fluid online makespan
+    under capacity events equals the Theorem-6 work-time inversion."""
+    tree = random_assembly_tree(70, rng)
+    events = [ElasticEvent(0.4, 40), ElasticEvent(1.2, 64), ElasticEvent(2.0, 16)]
+    ctl = ElasticController(64)
+    for ev in events:
+        ctl.capacity_change(ev.time, ev.devices)
+    mk, report = run_elastic_online(tree, ALPHA, 64, events)
+    assert mk == pytest.approx(ctl.pm_makespan(tree, ALPHA), rel=1e-9)
+    report.validate()
+    # the controller's event export feeds the same scheduler
+    sched = OnlineScheduler(64, ALPHA)
+    sched.submit(tree)
+    for t, payload in ctl.online_events():
+        sched.inject(t, payload)
+    assert sched.run().makespan == pytest.approx(mk, rel=1e-12)
+
+
+def test_run_elastic_schedule_through_event_core(rng):
+    tree = random_assembly_tree(40, rng)
+    mk_plain, _ = run_elastic_schedule(tree, ALPHA, 64, [])
+    mk_fail, plans = run_elastic_schedule(
+        tree, ALPHA, 64, [ElasticEvent(time=mk_plain * 0.4, devices=32)]
+    )
+    assert len(plans) >= 2
+    assert mk_fail >= mk_plain - 1e-9
+
+
+def test_straggler_injector_slows_online_run(rng):
+    det = StragglerDetector(n_nodes=8)
+    for _ in range(12):
+        for node in range(8):
+            det.record(node, 1.0 + (3.0 if node == 7 else 0.0) + rng.normal() * 0.01)
+    inj = StragglerInjector(det)
+    tree = random_assembly_tree(40, rng)
+    healthy = OnlineScheduler(ProcessorPool(8), ALPHA)
+    healthy.submit(tree)
+    mk_healthy = healthy.run().makespan
+    slow = OnlineScheduler(ProcessorPool(8), ALPHA)
+    slow.submit(tree)
+    assert inj.inject(slow, mk_healthy * 0.1) >= 1
+    assert inj.inject(slow, mk_healthy * 0.2) == 0  # idempotent re-poll
+    rep = slow.run()
+    rep.validate()
+    assert rep.makespan > mk_healthy
+
+
+# ----------------------------------------------------------------------
+# Replay bridge + waves tolerance (satellites)
+# ----------------------------------------------------------------------
+def test_waves_tolerance_groups_drifted_starts():
+    mk = 100.0
+    tasks = [
+        PlannedTask(task=0, label=0, devices=2, start=0.0, end=1.0),
+        PlannedTask(task=1, label=1, devices=2, start=3e-8, end=1.0),
+        PlannedTask(task=2, label=2, devices=2, start=50.0, end=60.0),
+        PlannedTask(task=3, label=3, devices=2, start=50.0 + 2e-8, end=60.0),
+    ]
+    plan = ExecutionPlan(
+        tasks=tasks, makespan=mk, fluid_makespan=mk, total_devices=4,
+        alpha=ALPHA,
+    )
+    waves = plan.waves()
+    assert [len(w) for w in waves] == [2, 2]
+    # exact grouping still works and distinct waves stay distinct
+    assert [t.task for t in waves[0]] == [0, 1]
+
+
+def test_plan_from_online_respects_precedence(rng):
+    tree = random_assembly_tree(30, rng)
+    plan, report = run_online_plan(
+        tree, 16, ALPHA, noise=LognormalNoise(0.3, seed=2)
+    )
+    assert plan.strategy == "online-pm"
+    by_task = {t.task: t for t in plan.tasks}
+    for i in range(tree.n):
+        p = int(tree.parent[i])
+        if p >= 0:
+            assert by_task[i].end <= by_task[p].start + 1e-9
+    assert plan.makespan == pytest.approx(report.makespan, rel=1e-12)
+    assert all(
+        1 <= t.devices <= 16 for t in plan.tasks if tree.lengths[t.task] > 0
+    )
+
+
+def test_execute_online_factorizes(rng):
+    """The full loop: online run → projected plan → wave executor →
+    numerically correct Cholesky factors."""
+    from repro.online import execute_online
+    from repro.sparse import (
+        analyze,
+        grid_laplacian_2d,
+        nested_dissection_2d,
+        permute_symmetric,
+    )
+
+    jax.config.update("jax_enable_x64", True)
+    try:
+        a = grid_laplacian_2d(9)
+        ap = permute_symmetric(a, nested_dissection_2d(9))
+        symb = analyze(ap, relax=1)
+        fact, exec_report, online_report = execute_online(
+            ap, symb, 8, ALPHA, noise=LognormalNoise(0.3, seed=3)
+        )
+        dense = ap.toarray()
+        l = fact.to_dense_l()
+        rel = np.abs(l @ l.T - dense).max() / np.abs(dense).max()
+        assert rel < 1e-5
+        assert len(exec_report.trace) == symb.n_supernodes
+        online_report.validate()
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+# ----------------------------------------------------------------------
+# Online serving mode (pod scheduler)
+# ----------------------------------------------------------------------
+def test_pod_serve_online():
+    from repro.configs import ARCHS
+    from repro.serve import Request, serve_online
+
+    cfg = ARCHS["qwen3-4b"]
+    reqs = [Request(i, 1024 * (1 + i % 4)) for i in range(8)]
+    arrivals = poisson_arrivals(8, 0.2, seed=5)
+    report = serve_online(
+        cfg, reqs, arrivals, pod_devices=256, alpha=ALPHA, admission="sjf"
+    )
+    report.validate()
+    assert all(f.state == "done" for f in report.futures.values())
+    rids = {f.rid for f in report.futures.values()}
+    assert rids == set(range(8))
+    assert report.mean_latency() > 0
+    assert 0 < report.utilization <= 1 + 1e-9
