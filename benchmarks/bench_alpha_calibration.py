@@ -51,6 +51,10 @@ def fit_alpha(m: int, nb: int, ps=(1, 2, 3, 4, 6, 8, 10)) -> float:
     return float(a)
 
 
+SEED = None
+CONFIG = {}
+
+
 def run() -> List[Dict]:
     rows = []
     for m, nb in [(512, 256), (2048, 1024), (8192, 4096), (16384, 8192),

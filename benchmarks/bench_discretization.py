@@ -17,10 +17,14 @@ from repro.runtime import ElasticEvent, run_elastic_schedule
 from repro.sparse import (
     analyze,
     grid_laplacian_2d,
-    make_plan,
     nested_dissection_2d,
     permute_symmetric,
 )
+from repro.sparse.plan import make_plan
+
+
+SEED = 3
+CONFIG = {"alphas": [0.9], "devices": [64, 256]}
 
 
 def run() -> List[Dict]:

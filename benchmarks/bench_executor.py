@@ -19,18 +19,22 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from repro.runtime import execute_plan
+from repro.runtime.executor import execute_plan
 from repro.sparse import (
     analyze,
     grid_laplacian_2d,
-    make_plan,
     nested_dissection_2d,
     permute_symmetric,
 )
+from repro.sparse.plan import make_plan
 
 ALPHA = 0.9
 GRID = 15
 NDEV_PLAN = 64
+
+
+SEED = None
+CONFIG = {"alpha": ALPHA, "grid": GRID, "plan_devices": NDEV_PLAN}
 
 
 def run() -> List[Dict]:

@@ -10,6 +10,10 @@ import numpy as np
 from repro.core import hetero_exact, hetero_fptas
 
 
+SEED = 11
+CONFIG = {"alpha": 0.85, "lambdas": [1.01, 1.05, 1.2]}
+
+
 def run() -> List[Dict]:
     rng = np.random.default_rng(11)
     rows: List[Dict] = []

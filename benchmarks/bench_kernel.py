@@ -15,6 +15,10 @@ from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 from repro.sparse.symbolic import partial_factor_flops
 
 
+SEED = 5
+CONFIG = {}
+
+
 def run() -> List[Dict]:
     rows: List[Dict] = []
     rng = np.random.default_rng(5)

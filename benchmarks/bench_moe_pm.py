@@ -17,6 +17,10 @@ from repro.core import k_node_greedy, star_tree
 from repro.core.hetero import hetero_fptas
 
 
+SEED = 13
+CONFIG = {}
+
+
 def run() -> List[Dict]:
     rng = np.random.default_rng(13)
     rows: List[Dict] = []

@@ -17,23 +17,23 @@ Three scenarios, all seeded/deterministic:
    by Lemma-4 forest ratios) under the three admission policies (FIFO /
    SJF-by-𝓛 / fair-share), reporting mean latency and pod utilization.
 
-``python -m benchmarks.bench_online [--smoke] [--out BENCH_online.json]``
-writes the machine-readable summary (mean-makespan ratios per policy,
-latencies per admission discipline) consumed by CI; ``benchmarks/run.py``
-does the same at the end of the full suite.
+``python -m benchmarks.bench_online [--smoke] [--outdir DIR]`` writes the
+uniform ``BENCH_online.json`` (rows under ``metrics``, the
+machine-readable summary — mean-makespan ratios per policy, latencies
+per admission discipline — under ``summary``) consumed by CI;
+``benchmarks/run.py`` does the same via the registry.
 """
 from __future__ import annotations
 
-import json
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import random_assembly_tree, tree_equivalent_lengths
+from repro.api import Session, SharedMemory
+from repro.core import random_assembly_tree
 from repro.online import (
     LognormalNoise,
-    OnlineScheduler,
     TreeRequest,
     poisson_arrivals,
     serve_trees,
@@ -44,6 +44,14 @@ NDEV = 32
 NOISE_SIGMA = 0.5
 SHARE_POLICIES = ("pm", "static", "static-proportional")
 ADMISSIONS = ("fifo", "sjf", "fair")
+SEED = 2
+CONFIG = {
+    "alpha": ALPHA,
+    "devices": NDEV,
+    "noise_sigma": NOISE_SIGMA,
+    "share_policies": list(SHARE_POLICIES),
+    "admissions": list(ADMISSIONS),
+}
 
 
 def _trees(n_trees: int, n_nodes: int, seed: int):
@@ -51,7 +59,7 @@ def _trees(n_trees: int, n_nodes: int, seed: int):
     return [random_assembly_tree(n_nodes, rng) for _ in range(n_trees)]
 
 
-def run(json_path: Optional[str] = None, smoke: bool = False) -> List[Dict]:
+def run(smoke: bool = False) -> Tuple[List[Dict], Dict]:
     n_trees, n_nodes = (4, 20) if smoke else (10, 40)
     rows: List[Dict] = []
     payload: Dict = {
@@ -62,16 +70,16 @@ def run(json_path: Optional[str] = None, smoke: bool = False) -> List[Dict]:
         "n_nodes": n_nodes,
     }
 
-    # 1. fidelity: zero noise reproduces the fluid PM makespan
+    # 1. fidelity: zero noise reproduces the fluid PM makespan — driven
+    #    through the Session facade (the public path CI smoke-tests)
     tree = _trees(1, n_nodes, seed=0)[0]
+    session = Session(SharedMemory(NDEV)).load(tree, ALPHA)
     t0 = time.time()
-    sched = OnlineScheduler(NDEV, ALPHA)
-    sched.submit(tree)
-    rep = sched.run()
+    report = session.simulate(policy="pm")
     us = (time.time() - t0) * 1e6
+    rep = report.detail  # the OnlineReport, for the §4 audit
     rep.validate()
-    fluid = tree_equivalent_lengths(tree, ALPHA)[tree.root] / NDEV**ALPHA
-    fid = rep.makespan / fluid
+    fid = report.makespan / session.fluid_makespan
     payload["fidelity_online_over_fluid"] = fid
     rows.append(
         {
@@ -146,18 +154,26 @@ def run(json_path: Optional[str] = None, smoke: bool = False) -> List[Dict]:
         )
     payload["mean_latency"] = lat
 
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(payload, f, indent=1)
-    return rows
+    return rows, payload
 
 
 if __name__ == "__main__":
     import argparse
 
+    from .run import write_bench_json
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
-    ap.add_argument("--out", default="BENCH_online.json")
+    ap.add_argument("--outdir", default=".")
     args = ap.parse_args()
-    for r in run(json_path=args.out, smoke=args.smoke):
+    rows, payload = run(smoke=args.smoke)
+    write_bench_json(
+        "online",
+        rows,
+        config=CONFIG,
+        seed=SEED,
+        summary=payload,
+        outdir=args.outdir,
+    )
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")

@@ -34,6 +34,10 @@ ALPHAS = [0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 1.0]
 PROCS = [40, 100]
 
 
+SEED = 0
+CONFIG = {"alphas": ALPHAS, "procs": PROCS}
+
+
 def tree_set(n_random: int = 40, seed: int = 0) -> List[TaskTree]:
     rng = np.random.default_rng(seed)
     trees: List[TaskTree] = []

@@ -20,6 +20,10 @@ from repro.core import (
 )
 
 
+SEED = 7
+CONFIG = {"alphas": [0.7, 0.9]}
+
+
 def run() -> List[Dict]:
     rng = np.random.default_rng(7)
     rows: List[Dict] = []

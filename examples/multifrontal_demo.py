@@ -1,12 +1,14 @@
-"""The paper's application end-to-end: matrix → ordering → symbolic →
-PM plan → *executed* factorization on a JAX mesh → ‖LLᵀ−A‖ check.
+"""The paper's application end-to-end through `repro.api`: matrix →
+ordering → symbolic → PM plan → *executed* factorization on a JAX mesh →
+‖LLᵀ−A‖ check.
 
 For each matrix: tree stats, PM vs PROPORTIONAL/DIVISIBLE projected
-makespans (§7), discretized plan efficiency.  The first matrix is then
-actually factorized by the malleable-plan executor (repro.runtime.executor):
-the PM plan's waves of power-of-two device groups run the Pallas frontal
-kernels (interpret mode on CPU), emitting a per-front trace and a
-measured-vs-projected makespan report with an empirical α re-fit.
+makespans (§7), discretized plan efficiency — all policies resolved from
+the same registry.  The first matrix is then actually factorized by the
+malleable-plan executor (``Session.execute``): the PM plan's waves of
+power-of-two device groups run the Pallas frontal kernels (interpret
+mode on CPU), emitting a per-front trace and a measured-vs-projected
+makespan report with an empirical α re-fit.
 
 Run:  PYTHONPATH=src python examples/multifrontal_demo.py
 (Forge a mesh: XLA_FLAGS=--xla_force_host_platform_device_count=8)
@@ -19,16 +21,12 @@ jax.config.update("jax_enable_x64", True)  # numeric validation in f64
 
 import numpy as np
 
-from repro.core import strategies_comparison
-from repro.runtime import execute_plan
+from repro.api import DeviceMesh, Session
 from repro.sparse import (
-    analyze,
     grid_laplacian_2d,
     grid_laplacian_3d,
-    make_plan,
     min_degree,
     nested_dissection_2d,
-    permute_symmetric,
     random_spd,
 )
 
@@ -36,25 +34,30 @@ ALPHA = 0.9
 
 
 def demo(name, a, perm=None, ndev=256, execute=False):
-    ap = permute_symmetric(a, perm) if perm is not None else a
+    session = Session(DeviceMesh(plan_devices=ndev))
     t0 = time.time()
-    symb = analyze(ap, relax=2)
-    tree = symb.task_tree()
+    session.analyze(a, alpha=ALPHA, ordering=perm)
     t_sym = time.time() - t0
-    m_pm, m_prop, m_div = strategies_comparison(tree, ALPHA, float(ndev))
-    plan = make_plan(tree, ndev, alpha=ALPHA)
+    symb = session.problem.symb
+    mk = {p: session.plan(policy=p).schedule.makespan
+          for p in ("pm", "proportional", "divisible")}
+    session.plan(policy="greedy")
+    plan = session.schedule
     msg = (f"{name:14s} n={symb.n:6d} fronts={symb.n_supernodes:5d} "
            f"maxfront={max(s.m for s in symb.supernodes):4d} "
-           f"| PM {m_pm:9.3g}  PROP +{100*(m_prop/m_pm-1):5.1f}%  "
-           f"DIV +{100*(m_div/m_pm-1):6.1f}% "
+           f"| PM {mk['pm']:9.3g}"
+           f"  PROP +{100*(mk['proportional']/mk['pm']-1):5.1f}%  "
+           f"DIV +{100*(mk['divisible']/mk['pm']-1):6.1f}% "
            f"| plan eff {plan.efficiency():.2f} | symbolic {t_sym*1e3:.0f}ms")
     print(msg)
     if execute:
-        fact, report = execute_plan(ap, symb, plan)
-        dense = ap.toarray()
-        l = fact.to_dense_l()
+        run = session.execute()
+        report = run.detail
+        dense = session.problem.matrix.toarray()
+        l = run.artifact.to_dense_l()
         rel = np.abs(l @ l.T - dense).max() / np.abs(dense).max()
-        print(f"--- executed {name} (PM plan, {len(jax.devices())} device(s))")
+        print(f"--- executed {name} (greedy PM plan, "
+              f"{len(jax.devices())} device(s))")
         print("\n".join("    " + ln for ln in report.summary().splitlines()))
         print(f"    residual    ‖LLᵀ−A‖/‖A‖ = {rel:.2e}"
               f"  ({'OK' if rel < 1e-5 else 'FAIL'})")

@@ -1,32 +1,26 @@
-"""Quickstart: the paper in five minutes on one CPU.
+"""Quickstart: the paper in five minutes on one CPU, through `repro.api`.
 
 1. Schedule a tree of malleable tasks with the PM optimal allocation and
-   compare against the speedup-unaware baselines (§5/§7).
-2. Factor a sparse SPD matrix with the PM-planned multifrontal method and
-   the Pallas frontal kernel (§3's application).
-3. Survive a capacity loss mid-plan (the paper's p(t) as fault tolerance).
+   compare against the speedup-unaware baselines (§5/§7) — three
+   policies from the same registry.
+2. Factor a sparse SPD matrix with the PM-planned multifrontal method
+   and the Pallas frontal kernel (§3's application), executed for real.
+3. Survive a capacity loss mid-run (the paper's p(t) as fault
+   tolerance) via the event-driven simulator.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import jax
+
+jax.config.update("jax_enable_x64", True)  # numeric validation in f64
+
 import numpy as np
 
-from repro.core import (
-    Profile,
-    from_pm,
-    random_assembly_tree,
-    strategies_comparison,
-    tree_equivalent_lengths,
-)
-from repro.kernels.ops import factor_fn
-from repro.runtime import ElasticEvent, run_elastic_schedule
-from repro.sparse import (
-    analyze,
-    factorize,
-    grid_laplacian_2d,
-    make_plan,
-    nested_dissection_2d,
-    permute_symmetric,
-)
+from repro.api import Problem, Session, SharedMemory
+from repro.core import Profile
+from repro.online.events import SetCapacity
+from repro.core.trees import random_assembly_tree
+from repro.sparse import grid_laplacian_2d, nested_dissection_2d
 
 ALPHA = 0.9  # the paper's measured range on its platform: 0.85–0.95
 
@@ -35,38 +29,45 @@ def main() -> None:
     rng = np.random.default_rng(0)
 
     print("=== 1. PM optimal schedule vs baselines (p = 40) ===")
-    tree = random_assembly_tree(500, rng)
-    m_pm, m_prop, m_div = strategies_comparison(tree, ALPHA, 40.0)
-    print(f"PM (optimal)     : {m_pm:10.2f}")
-    print(f"PROPORTIONAL     : {m_prop:10.2f}  (+{100*(m_prop/m_pm-1):.1f}%)")
-    print(f"DIVISIBLE        : {m_div:10.2f}  (+{100*(m_div/m_pm-1):.1f}%)")
-    sched = from_pm(tree, ALPHA, Profile.constant(40.0))
-    sched.validate(tree, Profile.constant(40.0))
+    session = Session(SharedMemory(40)).load(
+        random_assembly_tree(500, rng), ALPHA
+    )
+    mk = {p: session.plan(policy=p).schedule.makespan
+          for p in ("pm", "proportional", "divisible")}
+    print(f"PM (optimal)     : {mk['pm']:10.2f}")
+    print(f"PROPORTIONAL     : {mk['proportional']:10.2f}  "
+          f"(+{100*(mk['proportional']/mk['pm']-1):.1f}%)")
+    print(f"DIVISIBLE        : {mk['divisible']:10.2f}  "
+          f"(+{100*(mk['divisible']/mk['pm']-1):.1f}%)")
+    session.plan(policy="pm").schedule.validate(session.problem)
     print("PM schedule validated against the §4 conditions.\n")
 
     print("=== 2. PM-planned multifrontal Cholesky (Pallas kernel) ===")
     a = grid_laplacian_2d(21, 21)
-    ap = permute_symmetric(a, nested_dissection_2d(21, 21))
-    symb = analyze(ap, relax=2)
-    ttree = symb.task_tree()
-    plan = make_plan(ttree, 64, alpha=ALPHA)
-    print(f"{symb.n_supernodes} fronts; plan efficiency vs fluid optimum: "
-          f"{plan.efficiency():.2%}")
-    order = [t.label for w in plan.waves() for t in w if t.label >= 0]
-    fact = factorize(ap, symb, factor_fn=factor_fn(), order=order)
-    l = fact.to_dense_l()
-    err = np.abs(l @ l.T - ap.toarray()).max()
-    print(f"||LLᵀ − A||_inf = {err:.2e}\n")
+    s2 = Session(SharedMemory(64)).analyze(
+        a, alpha=ALPHA, ordering=nested_dissection_2d(21, 21)
+    )
+    run = s2.plan(policy="greedy").execute()
+    print(f"{len(run.planned.tasks())} fronts; plan efficiency vs fluid "
+          f"optimum: {run.planned.efficiency():.2%}")
+    l = run.artifact.to_dense_l()
+    dense = s2.problem.matrix.toarray()
+    err = np.abs(l @ l.T - dense).max()
+    print(f"executed in {run.detail.n_dispatches} dispatches: "
+          f"||LLᵀ − A||_inf = {err:.2e}\n")
 
     print("=== 3. Elastic: lose half the mesh at 40% progress ===")
-    mk, plans = run_elastic_schedule(
-        ttree, ALPHA, 64, [ElasticEvent(plan.makespan * 0.4, 32)]
-    )
-    eq = tree_equivalent_lengths(ttree, ALPHA)[ttree.root]
-    fluid = Profile.of([(plan.makespan * 0.4, 64.0), (np.inf, 32.0)])
-    print(f"no-failure makespan : {plan.makespan:10.3g}")
-    print(f"with failure        : {mk:10.3g} ({len(plans)} plans)")
-    print(f"fluid lower bound   : {fluid.time_for_work(eq, ALPHA):10.3g}")
+    tree = random_assembly_tree(500, rng)
+    s = Session(SharedMemory(64)).load(tree, ALPHA).plan(policy="pm")
+    mk_plan = s.schedule.makespan
+    t_fail = mk_plan * 0.4
+    rep = s.simulate(events=[(t_fail, SetCapacity(32.0))])
+    prob = Problem.from_tree(tree, ALPHA)
+    fluid = prob.fluid_makespan(Profile.of([(t_fail, 64.0), (np.inf, 32.0)]))
+    print(f"no-failure makespan : {mk_plan:10.3g}")
+    print(f"with failure        : {rep.makespan:10.3g} "
+          f"({rep.detail.n_reshares} re-shares)")
+    print(f"fluid lower bound   : {fluid:10.3g}")
     print("ratios survive the capacity step (Lemma 4) — only shares rescale.")
 
 

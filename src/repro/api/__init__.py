@@ -1,0 +1,58 @@
+"""repro.api — the unified scheduling facade.
+
+Three concepts, one result type:
+
+* :class:`Platform`  — where things run: shared-memory processors
+  (:class:`SharedMemory`, §4's p(t)), distributed multicore nodes
+  (:class:`MulticoreCluster`, §6's 𝓡 constraint), or a JAX device mesh
+  (:class:`DeviceMesh`, with the ``to_mesh``/``devices`` bridge).
+* :class:`Policy`    — how shares are decided: a string-keyed registry
+  (``pm``, ``proportional``, ``divisible``, ``greedy``, ``static``,
+  ``two-node``, ``hetero``, ``k-node``, ...); new policies register via
+  the :func:`register_policy` decorator in their own file.
+* :class:`Session`   — the fluent driver:
+  ``Session(platform).analyze(A, alpha=0.9).plan(policy="pm")`` then
+  ``.execute()`` (JAX mesh), ``.simulate(noise=...)`` (event loop) or
+  ``.serve(stream)`` (request serving).
+
+Every path produces the same :class:`Schedule` (§4 validation, fluid
+lower bound, JSON round-trip, Gantt/trace export) and, when run, a
+:class:`RunReport`.  The shared :class:`Problem` carries the tree and α
+so no subsystem re-derives lengths independently.
+"""
+from .platform import (
+    DeviceMesh,
+    MulticoreCluster,
+    Platform,
+    SharedMemory,
+    as_platform,
+)
+from .policy import (
+    POLICY_REGISTRY,
+    Policy,
+    available_policies,
+    get_policy,
+    register_policy,
+)
+from .problem import Problem, as_problem
+from .schedule import RunReport, Schedule, ShareEntry
+from .session import Session
+
+__all__ = [
+    "DeviceMesh",
+    "MulticoreCluster",
+    "POLICY_REGISTRY",
+    "Platform",
+    "Policy",
+    "Problem",
+    "RunReport",
+    "Schedule",
+    "Session",
+    "SharedMemory",
+    "ShareEntry",
+    "as_platform",
+    "as_problem",
+    "available_policies",
+    "get_policy",
+    "register_policy",
+]

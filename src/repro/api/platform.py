@@ -1,0 +1,220 @@
+"""One platform protocol over the repo's four platform notions.
+
+Before the facade, "where does this run" was spelled four ways: a
+:class:`~repro.core.profiles.Profile` (shared memory, §4's p(t)), a node
+count / :class:`~repro.online.events.ProcessorPool` (the online core),
+``(p, q)`` node pairs (§6's two-node algorithms), and a JAX device list
+(the wave executor).  A :class:`Platform` answers all four questions:
+
+* ``capacity()``            — total processors right now
+* ``profile()``             — capacity over time (step function p(t))
+* ``node_sizes()``          — the 𝓡-constraint structure (one entry per
+  multicore node; a single entry means no placement constraint)
+* ``to_mesh()`` / ``devices()`` — the JAX bridge for real execution
+
+New platforms subclass :class:`Platform` in their own file; ``Session``
+only speaks the protocol, so nothing else changes.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple, Union
+
+from repro.core.profiles import Profile
+
+
+class Platform:
+    """Base protocol.  Subclasses override what differs."""
+
+    name: str = "platform"
+
+    # -- capacity -------------------------------------------------------
+    def capacity(self) -> float:
+        """Total processors available at t=0."""
+        raise NotImplementedError
+
+    def profile(self) -> Profile:
+        """Capacity over time; constant by default."""
+        return Profile.constant(self.capacity())
+
+    def node_sizes(self) -> Tuple[float, ...]:
+        """Per-node processor counts (the 𝓡 placement constraint).
+
+        A single entry means tasks may use any processors (shared
+        memory / one pod); ≥ 2 entries means a task must stay within one
+        node (§6's constraint).
+        """
+        return (self.capacity(),)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.node_sizes())
+
+    def to_pool(self):
+        """A live :class:`~repro.online.events.ProcessorPool` sized to
+        this platform (the online scheduler's capacity substrate)."""
+        from repro.online.events import ProcessorPool
+
+        p = self.capacity()
+        if abs(p - round(p)) < 1e-9 and p >= 1:
+            return ProcessorPool(int(round(p)))
+        return ProcessorPool(1, node_speed=p)
+
+    # -- the JAX bridge -------------------------------------------------
+    def devices(self) -> Optional[List]:
+        """JAX devices backing this platform, or None (model-only)."""
+        return None
+
+    def to_mesh(self, axis: str = "task"):
+        """1-D ``jax.sharding.Mesh`` over :meth:`devices`.
+
+        Raises on model-only platforms — planning works everywhere, but
+        execution needs hardware behind the capacity numbers.
+        """
+        devs = self.devices()
+        if not devs:
+            raise RuntimeError(
+                f"platform {self.name!r} has no devices to build a mesh "
+                f"from; use DeviceMesh (or any Platform whose devices() "
+                f"is non-empty) for .execute()"
+            )
+        import numpy as np
+        from jax.sharding import Mesh
+
+        return Mesh(np.array(devs), (axis,))
+
+    def describe(self) -> str:
+        sizes = self.node_sizes()
+        nodes = "x".join(f"{s:g}" for s in sizes)
+        return f"{self.name}[{nodes}]"
+
+    def __repr__(self) -> str:
+        return self.describe()
+
+
+# ----------------------------------------------------------------------
+class SharedMemory(Platform):
+    """§4's machine: p processors, possibly varying over time.
+
+    ``SharedMemory(40)`` or ``SharedMemory(Profile.of([(10, 64), (inf,
+    32)]))`` — the paper's step-function p(t) is the platform.
+    """
+
+    name = "shared"
+
+    def __init__(self, p: Union[float, int, Profile]) -> None:
+        if isinstance(p, Profile):
+            self._profile = p
+        else:
+            if p <= 0:
+                raise ValueError("capacity must be positive")
+            self._profile = Profile.constant(float(p))
+
+    def capacity(self) -> float:
+        return self._profile.p_at(0.0)
+
+    def profile(self) -> Profile:
+        return self._profile
+
+
+class MulticoreCluster(Platform):
+    """Distributed multicore nodes with the 𝓡 constraint (§6).
+
+    ``MulticoreCluster([p, p])`` is the homogeneous two-node platform of
+    Algorithm 11; ``MulticoreCluster([p, q])`` the heterogeneous one of
+    Algorithm 12; ``k`` entries the beyond-paper k-node greedy.
+    """
+
+    name = "cluster"
+
+    def __init__(self, nodes: Sequence[float]) -> None:
+        sizes = tuple(float(s) for s in nodes)
+        if not sizes or any(s <= 0 for s in sizes):
+            raise ValueError("cluster needs positive node sizes")
+        self._sizes = sizes
+
+    def capacity(self) -> float:
+        return float(sum(self._sizes))
+
+    def node_sizes(self) -> Tuple[float, ...]:
+        return self._sizes
+
+    @property
+    def homogeneous(self) -> bool:
+        return len(set(self._sizes)) == 1
+
+
+class DeviceMesh(Platform):
+    """A JAX device mesh: capacity = device count, and a real bridge.
+
+    ``DeviceMesh()`` takes ``jax.devices()`` lazily (importing this
+    module never touches jax device state — forge meshes by setting
+    XLA_FLAGS before the first jax call, as the dry-run driver does).
+    ``plan_devices`` lets a plan target a bigger mesh than the local one
+    (plan for 256, execute on the 8 forged host devices — the executor
+    rescales groups).
+    """
+
+    name = "mesh"
+
+    def __init__(
+        self,
+        devices: Optional[Sequence] = None,
+        *,
+        plan_devices: Optional[int] = None,
+    ) -> None:
+        self._devices = list(devices) if devices is not None else None
+        if plan_devices is not None and plan_devices < 1:
+            raise ValueError("plan_devices must be >= 1")
+        self._plan_devices = plan_devices
+
+    def devices(self) -> List:
+        if self._devices is None:
+            import jax
+
+            self._devices = list(jax.devices())
+        return self._devices
+
+    def capacity(self) -> float:
+        if self._plan_devices is not None:
+            return float(self._plan_devices)
+        return float(len(self.devices()))
+
+    def describe(self) -> str:
+        n = self._plan_devices
+        if n is None and self._devices is not None:
+            n = len(self._devices)
+        return f"mesh[{n if n is not None else '?'}]"
+
+
+# ----------------------------------------------------------------------
+def as_platform(obj) -> Platform:
+    """Coerce ``obj`` into a Platform.
+
+    Platform → itself; number → SharedMemory; Profile → SharedMemory;
+    sequence of numbers → MulticoreCluster; None → DeviceMesh().
+    """
+    if isinstance(obj, Platform):
+        return obj
+    if obj is None:
+        return DeviceMesh()
+    if isinstance(obj, Profile):
+        return SharedMemory(obj)
+    if isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        if not math.isfinite(float(obj)):
+            raise ValueError("capacity must be finite")
+        return SharedMemory(obj)
+    if isinstance(obj, (list, tuple)) and obj and all(
+        isinstance(x, (int, float)) for x in obj
+    ):
+        return MulticoreCluster(obj)
+    raise TypeError(f"cannot interpret {obj!r} as a Platform")
+
+
+__all__ = [
+    "DeviceMesh",
+    "MulticoreCluster",
+    "Platform",
+    "SharedMemory",
+    "as_platform",
+]

@@ -1,0 +1,315 @@
+"""The fluent facade: ``Session(platform).analyze(A).plan().execute()``.
+
+One object strings the whole pipeline together — tree of `p^α` malleable
+tasks → policy plan → (simulated | executed | served) run — over any
+:class:`~repro.api.platform.Platform` and any registered
+:class:`~repro.api.policy.Policy`.  Every step returns ``self`` until a
+terminal verb produces a :class:`~repro.api.schedule.RunReport`:
+
+>>> from repro.api import Session, SharedMemory
+>>> rep = (Session(SharedMemory(40))
+...        .analyze(a, alpha=0.9)
+...        .plan(policy="pm")
+...        .simulate())
+
+Terminal verbs:
+
+* ``simulate(noise=..., events=...)`` — the discrete-event online loop
+  (duration noise, capacity edits, failures) on the planned problem.
+* ``execute(...)`` — the wave executor on the platform's JAX devices;
+  needs a problem that came from a matrix (``analyze``) and converts
+  the current schedule to an ExecutionPlan (exact when discretized).
+* ``serve(stream)`` — multi-tenant request serving through the
+  admission queue.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .platform import Platform, as_platform
+from .policy import get_policy
+from .problem import Problem, as_problem
+from .schedule import RunReport, Schedule
+
+
+class Session:
+    """A scheduling session on one platform.
+
+    The session is a small state machine: ``analyze``/``load`` set the
+    problem, ``plan`` sets the schedule, the terminal verbs run it.
+    Each setter returns ``self`` so calls chain fluently; ``problem``
+    and ``schedule`` stay inspectable at every step.
+    """
+
+    def __init__(self, platform=None) -> None:
+        self.platform: Platform = as_platform(platform)
+        self.problem: Optional[Problem] = None
+        self.schedule: Optional[Schedule] = None
+
+    # -- problem setup --------------------------------------------------
+    def analyze(
+        self,
+        a,
+        alpha: float = 0.9,
+        *,
+        ordering=None,
+        relax: int = 2,
+        flop_rate: float = 1.0,
+    ) -> "Session":
+        """Sparse SPD matrix → ordering → symbolic → task tree."""
+        self.problem = Problem.from_matrix(
+            a, alpha, ordering=ordering, relax=relax, flop_rate=flop_rate
+        )
+        self.schedule = None
+        return self
+
+    def load(self, problem, alpha: Optional[float] = None) -> "Session":
+        """Set the problem directly (Problem, TaskTree+α, lengths+α)."""
+        self.problem = as_problem(problem, alpha)
+        self.schedule = None
+        return self
+
+    def _require_problem(self) -> Problem:
+        if self.problem is None:
+            raise RuntimeError(
+                "no problem loaded; call .analyze(A, alpha=...) or "
+                ".load(problem) first"
+            )
+        return self.problem
+
+    # -- planning -------------------------------------------------------
+    def plan(self, policy: str = "pm", **opts) -> "Session":
+        """Plan with a registered policy; the Schedule lands on
+        ``self.schedule`` (chain ``.execute()`` / inspect directly)."""
+        problem = self._require_problem()
+        self.schedule = get_policy(policy, **opts).plan(problem, self.platform)
+        return self
+
+    @property
+    def fluid_makespan(self) -> float:
+        """Theorem-6 lower bound of the loaded problem on this platform."""
+        return self._require_problem().fluid_makespan(self.platform.profile())
+
+    def _require_schedule(self) -> Schedule:
+        if self.schedule is None:
+            self.plan()
+        assert self.schedule is not None
+        return self.schedule
+
+    # -- terminal verbs -------------------------------------------------
+    def simulate(
+        self,
+        *,
+        noise=None,
+        events: Sequence[Tuple[float, object]] = (),
+        policy: Optional[str] = None,
+        speedup_floor: bool = False,
+        until: float = np.inf,
+    ) -> RunReport:
+        """Run the problem through the discrete-event online scheduler.
+
+        ``policy`` is the share rule (``pm`` / ``proportional`` /
+        ``static`` / ``static-proportional``); defaults to the planned
+        policy when that is a share rule, else ``pm``.  ``events`` are
+        ``(time, payload)`` pairs of online events (SetCapacity,
+        SetNodeSpeed, TaskFailure); a non-constant platform profile is
+        injected automatically as SetCapacity steps.
+        """
+        from repro.online.events import SetCapacity
+        from repro.online.scheduler import SHARE_POLICIES, OnlineScheduler
+
+        problem = self._require_problem()
+        if policy is None:
+            planned = self.schedule.policy if self.schedule else "pm"
+            policy = planned if planned in SHARE_POLICIES else "pm"
+        steps = self.platform.profile().steps
+        sched = OnlineScheduler(
+            self.platform.to_pool(),
+            problem.alpha,
+            policy=policy,
+            noise=noise,
+            speedup_floor=speedup_floor,
+        )
+        profile = self.platform.profile()
+        t_acc = 0.0
+        for d, p in steps[:-1]:
+            t_acc += d
+            sched.inject(t_acc, SetCapacity(float(profile.p_at(t_acc))))
+        for t, payload in events:
+            sched.inject(t, payload)
+        sched.submit(problem)
+        report = sched.run(until=until)
+        realized = Schedule.from_online(
+            report,
+            policy=f"online-{policy}",
+            platform=self.platform.describe(),
+            tree_id=0,
+        )
+        return RunReport(
+            kind="simulated",
+            schedule=realized,
+            makespan=report.makespan,
+            fluid_makespan=realized.fluid_makespan,
+            planned=self.schedule,
+            metrics={
+                "utilization": report.utilization,
+                "n_events": float(report.n_events),
+                "n_reshares": float(report.n_reshares),
+            },
+            detail=report,
+        )
+
+    def execute(self, *, warmup: bool = True, **executor_kwargs) -> RunReport:
+        """Execute the current schedule on the platform's JAX devices.
+
+        The problem must carry its sparse context (``analyze`` or
+        ``Problem.from_matrix``/``from_symbolic`` with a matrix); a
+        fluid schedule is discretized on the way (exact pass-through
+        for ``greedy``-family schedules and shipped-JSON plans).
+        """
+        from repro.runtime.executor import PlanExecutor
+
+        problem = self._require_problem()
+        if problem.symb is None or problem.matrix is None:
+            raise RuntimeError(
+                "execute() needs a problem with symbolic+matrix context; "
+                "build it with Session.analyze or Problem.from_matrix"
+            )
+        schedule = self._require_schedule()
+        if schedule.entries:
+            plan = schedule.to_execution_plan()
+        else:
+            raise RuntimeError(
+                f"policy {schedule.policy!r} produced a placement, not an "
+                f"executable schedule; plan with 'greedy' (or any "
+                f"share-based policy) to execute"
+            )
+        devices = self.platform.devices()
+        executor = PlanExecutor(
+            problem.symb,
+            plan,
+            devices=devices,
+            **executor_kwargs,
+        )
+        fact, report = executor.run(problem.matrix, warmup=warmup)
+        # the schedule's fluid bound is in model units; map it to seconds
+        # at the measured work rate so efficiency() compares like units
+        proj = report.projected_seconds()
+        fluid_seconds = (
+            proj * schedule.fluid_makespan / schedule.makespan
+            if schedule.makespan > 0
+            else proj
+        )
+        return RunReport(
+            kind="executed",
+            schedule=schedule,
+            makespan=report.measured_makespan,
+            fluid_makespan=fluid_seconds,
+            planned=schedule,
+            metrics={
+                "measured_rate": report.measured_rate(),
+                "n_dispatches": float(report.n_dispatches),
+                "n_devices": float(report.n_devices),
+                "projected_seconds": report.projected_seconds(),
+            },
+            detail=report,
+            artifact=fact,
+        )
+
+    def serve(
+        self,
+        stream: Iterable,
+        *,
+        policy: str = "pm",
+        admission: str = "fifo",
+        max_concurrent: Optional[int] = None,
+        noise=None,
+        speedup_floor: bool = False,
+        alpha: Optional[float] = None,
+    ) -> RunReport:
+        """Serve a stream of tree requests on this platform.
+
+        Stream items: ``TreeRequest``, ``Problem`` (arrival 0), or
+        ``(tree_or_problem, arrival)`` / ``(tree_or_problem, arrival,
+        tenant)`` tuples.  α comes from the loaded problem, the
+        ``alpha`` argument, or the first Problem in the stream.
+        """
+        from repro.online.queue import TreeRequest, serve_trees
+
+        items = list(stream)
+        if alpha is None and self.problem is not None:
+            alpha = self.problem.alpha
+        if alpha is None:  # pre-scan: any Problem in the stream fixes α
+            for item in items:
+                inner = item[0] if isinstance(item, tuple) and item else item
+                if isinstance(inner, Problem):
+                    alpha = inner.alpha
+                    break
+        if alpha is None:
+            raise ValueError(
+                "serve() could not determine alpha; load a problem, pass "
+                "alpha=, or put a Problem in the stream"
+            )
+        reqs: List[TreeRequest] = []
+        for item in items:
+            if isinstance(item, TreeRequest):
+                reqs.append(item)
+                continue
+            arrival, tenant = 0.0, 0
+            if isinstance(item, tuple):
+                if len(item) == 3:
+                    item, arrival, tenant = item[0], float(item[1]), int(item[2])
+                elif len(item) == 2:
+                    item, arrival = item[0], float(item[1])
+                else:
+                    raise ValueError(
+                        "stream tuples are (problem, arrival[, tenant])"
+                    )
+            prob = as_problem(item, alpha)
+            reqs.append(
+                TreeRequest(
+                    tree=prob, arrival=arrival, tenant=tenant, rid=len(reqs)
+                )
+            )
+        report = serve_trees(
+            reqs,
+            self.platform.to_pool(),
+            alpha,
+            policy=policy,
+            admission=admission,
+            max_concurrent=max_concurrent,
+            noise=noise,
+            speedup_floor=speedup_floor,
+        )
+        realized = Schedule.from_online(
+            report,
+            policy=f"serve-{policy}",
+            platform=self.platform.describe(),
+        )
+        return RunReport(
+            kind="served",
+            schedule=realized,
+            makespan=report.makespan,
+            fluid_makespan=realized.fluid_makespan,
+            planned=self.schedule,
+            metrics={
+                "mean_latency": report.mean_latency(),
+                "mean_service": report.mean_service(),
+                "utilization": report.utilization,
+            },
+            detail=report,
+        )
+
+    # ------------------------------------------------------------------
+    def __repr__(self) -> str:
+        prob = self.problem.name if self.problem else None
+        pol = self.schedule.policy if self.schedule else None
+        return (
+            f"Session({self.platform.describe()}, problem={prob!r}, "
+            f"planned={pol!r})"
+        )
+
+
+__all__ = ["Session"]

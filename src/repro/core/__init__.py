@@ -52,7 +52,6 @@ from .pm import (
     equivalent_lengths,
     pm_makespan,
     pm_makespan_constant_p,
-    pm_schedule,
     tree_equivalent_lengths,
     tree_pm_ratios,
     tree_pm_windows,
@@ -70,3 +69,27 @@ from .two_node import (
 )
 
 __all__ = [k for k in dir() if not k.startswith("_")]
+
+# ----------------------------------------------------------------------
+# Deprecated entry point(s): kept working through a PEP 562 shim that
+# warns once and defers to the implementation module.  New code goes
+# through repro.api (Session / Platform / Policy) — see docs/API.md.
+_DEPRECATED = {
+    "pm_schedule": (
+        "repro.core.pm",
+        "repro.api.Session.plan(policy='pm')",
+    ),
+}
+__all__ += list(_DEPRECATED)
+
+
+def __getattr__(name):
+    if name in _DEPRECATED:  # lazy: keep repro.api out of base imports
+        from repro.api._deprecate import deprecated_getattr
+
+        return deprecated_getattr(__name__, _DEPRECATED)(name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_DEPRECATED))

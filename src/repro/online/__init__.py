@@ -22,7 +22,31 @@ from .events import (
 )
 from .queue import AdmissionQueue, TreeRequest, poisson_arrivals, serve_trees
 from .replay import execute_online, plan_from_online, run_online_plan
-from .scheduler import SHARE_POLICIES, OnlineReport, OnlineScheduler
+from .scheduler import SHARE_POLICIES, OnlineReport
 from .state import OnlineFailure, TreeFuture, TreeRun, combined_tree
 
 __all__ = [k for k in dir() if not k.startswith("_")]
+
+# ----------------------------------------------------------------------
+# Deprecated entry point(s): kept working through a PEP 562 shim that
+# warns once and defers to the implementation module.  New code goes
+# through repro.api (Session / Platform / Policy) — see docs/API.md.
+_DEPRECATED = {
+    "OnlineScheduler": (
+        "repro.online.scheduler",
+        "repro.api.Session.simulate()",
+    ),
+}
+__all__ += list(_DEPRECATED)
+
+
+def __getattr__(name):
+    if name in _DEPRECATED:  # lazy: keep repro.api out of base imports
+        from repro.api._deprecate import deprecated_getattr
+
+        return deprecated_getattr(__name__, _DEPRECATED)(name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_DEPRECATED))

@@ -31,9 +31,15 @@ POLICIES = ("fifo", "sjf", "fair")
 
 @dataclass
 class TreeRequest:
-    """One request of the serving stream."""
+    """One request of the serving stream.
 
-    tree: TaskTree
+    ``tree`` is a :class:`TaskTree` or a shared
+    :class:`repro.api.problem.Problem`; :func:`serve_trees` wraps bare
+    trees into Problems so admission ordering (SJF by 𝓛) and execution
+    read α and lengths from the same object.
+    """
+
+    tree: object  # TaskTree | repro.api.problem.Problem
     arrival: float = 0.0
     tenant: int = 0
     rid: Optional[int] = None
@@ -115,6 +121,7 @@ def serve_trees(
     plans cannot overlap trees (frozen shares of two trees would break
     the §4 resource bound), so ``static`` forces ``max_concurrent=1``.
     """
+    from repro.api.problem import as_problem  # deferred: api ← online
     from .scheduler import OnlineScheduler  # deferred: queue ← scheduler
 
     if policy.startswith("static"):
@@ -129,7 +136,10 @@ def serve_trees(
     )
     for req in requests:
         sched.submit(
-            req.tree, at=req.arrival, tenant=req.tenant, rid=req.rid
+            as_problem(req.tree, alpha),
+            at=req.arrival,
+            tenant=req.tenant,
+            rid=req.rid,
         )
     return sched.run()
 

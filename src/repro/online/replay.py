@@ -14,29 +14,25 @@ the tolerance rule of ``ExecutionPlan.waves``).
 """
 from __future__ import annotations
 
-import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import scipy.sparse as sp
 
-from repro.core.graph import TaskTree
-from repro.core.pm import tree_equivalent_lengths
-from repro.sparse.plan import ExecutionPlan, PlannedTask
+from repro.sparse.plan import ExecutionPlan, PlannedTask, pow2_devices
 from repro.sparse.symbolic import SymbolicFactorization
 
 from .scheduler import OnlineReport, OnlineScheduler
 
 
-def _pow2_devices(share: float, total: int) -> int:
-    """Nearest power-of-two device count for a fluid share, in [1, total]."""
-    if share <= 0:
-        return 1
-    g = 2 ** int(round(math.log2(max(share, 1.0))))
-    return int(min(max(g, 1), total))
+def _as_problem(tree_or_problem, alpha: Optional[float]):
+    """Coerce to the shared Problem (single source of α and 𝓛)."""
+    from repro.api.problem import as_problem  # deferred: api ← online
+
+    return as_problem(tree_or_problem, alpha)
 
 
 def plan_from_online(
-    tree: TaskTree,
+    tree_or_problem,
     report: OnlineReport,
     total_devices: int,
     *,
@@ -47,10 +43,13 @@ def plan_from_online(
     Task start/end times are the online event times; device groups are
     the power-of-two rounding of the task's time-averaged share.  The
     plan's ``fluid_makespan`` stays the PM optimum on ``total_devices``
-    so ``efficiency()`` still measures distance to the true bound.
+    so ``efficiency()`` still measures distance to the true bound —
+    taken from the shared Problem's cached equivalent lengths, the same
+    numbers admission used.
     """
+    problem = _as_problem(tree_or_problem, report.alpha)
+    tree, alpha = problem.tree, problem.alpha
     run = report.runs[tree_id]
-    alpha = report.alpha
     tasks = []
     for i, t_start, t_done, mean_share in report.task_records(tree_id):
         zero = tree.lengths[i] <= 0
@@ -58,17 +57,16 @@ def plan_from_online(
             PlannedTask(
                 task=i,
                 label=int(tree.labels[i]),
-                devices=0 if zero else _pow2_devices(mean_share, total_devices),
+                devices=0 if zero else pow2_devices(mean_share, total_devices),
                 start=float(t_start),
                 end=float(t_done),
             )
         )
     tasks.sort(key=lambda t: (t.start, t.task))
-    eq = tree_equivalent_lengths(tree, alpha)[tree.root]
     return ExecutionPlan(
         tasks=tasks,
         makespan=float(run.future.t_done - run.future.t_admit),
-        fluid_makespan=float(eq / total_devices**alpha),
+        fluid_makespan=float(problem.eq_root / total_devices**alpha),
         total_devices=int(total_devices),
         alpha=alpha,
         strategy=f"online-{report.policy}",
@@ -76,25 +74,30 @@ def plan_from_online(
 
 
 def run_online_plan(
-    tree: TaskTree,
+    tree_or_problem,
     total_devices: int,
-    alpha: float,
+    alpha: Optional[float] = None,
     *,
     policy: str = "pm",
     noise=None,
     speedup_floor: bool = False,
 ) -> Tuple[ExecutionPlan, OnlineReport]:
-    """Run one tree online on ``total_devices`` and project the plan."""
+    """Run one tree online on ``total_devices`` and project the plan.
+
+    Accepts a TaskTree (+α) or a shared Problem; the same Problem feeds
+    the online run and the plan projection.
+    """
+    problem = _as_problem(tree_or_problem, alpha)
     sched = OnlineScheduler(
         total_devices,
-        alpha,
+        problem.alpha,
         policy=policy,
         noise=noise,
         speedup_floor=speedup_floor,
     )
-    sched.submit(tree)
+    sched.submit(problem)
     report = sched.run()
-    return plan_from_online(tree, report, total_devices), report
+    return plan_from_online(problem, report, total_devices), report
 
 
 def execute_online(
@@ -109,12 +112,17 @@ def execute_online(
 ):
     """Factorize ``a`` through the online scheduler: online run → plan →
     wave executor.  Returns (Factorization, ExecutionReport, OnlineReport).
+
+    One shared Problem (built from the symbolic analysis) drives the
+    online admission, the plan projection and the executor, so α and
+    the frontal lengths cannot drift between the three.
     """
+    from repro.api.problem import Problem  # deferred: api ← online
     from repro.runtime.executor import PlanExecutor  # deferred: jax import
 
-    tree = symb.task_tree()
+    problem = Problem.from_symbolic(symb, alpha, matrix=a)
     plan, online_report = run_online_plan(
-        tree, total_devices, alpha, policy=policy, noise=noise
+        problem, total_devices, policy=policy, noise=noise
     )
     fact, exec_report = PlanExecutor(symb, plan, **executor_kwargs).run(a)
     return fact, exec_report, online_report

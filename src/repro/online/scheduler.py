@@ -242,12 +242,33 @@ class OnlineScheduler:
     # ------------------------------------------------------------------
     def submit(
         self,
-        tree: TaskTree,
+        tree,
         at: Optional[float] = None,
         tenant: int = 0,
         rid: Optional[int] = None,
     ) -> TreeFuture:
-        """Register a tree; it arrives (enters admission) at ``at``."""
+        """Register a tree; it arrives (enters admission) at ``at``.
+
+        ``tree`` may be a :class:`TaskTree` or a
+        :class:`repro.api.problem.Problem` — the shared problem is the
+        single source of α and equivalent lengths, so admission (SJF by
+        𝓛) and execution cannot drift.  A problem whose α differs from
+        the scheduler's is refused.
+        """
+        from repro.api.problem import Problem  # deferred: api ← online
+
+        if isinstance(tree, Problem):
+            problem = tree
+            if abs(problem.alpha - self.alpha) > 1e-12:
+                raise ValueError(
+                    f"problem has alpha={problem.alpha}, scheduler runs "
+                    f"alpha={self.alpha}"
+                )
+            tree, eq_root = problem.tree, problem.eq_root
+        else:
+            eq_root = float(
+                tree_equivalent_lengths(tree, self.alpha)[tree.root]
+            )
         tree_id = len(self.runs)
         t = self.clock.now if at is None else max(float(at), self.clock.now)
         run = TreeRun(
@@ -261,9 +282,7 @@ class OnlineScheduler:
         )
         self._next_base += tree.n
         self.runs[tree_id] = run
-        self.eq_nominal[tree_id] = float(
-            tree_equivalent_lengths(tree, self.alpha)[tree.root]
-        )
+        self.eq_nominal[tree_id] = eq_root
         self.inject(t, Arrival(tree_id))
         return run.future
 

@@ -9,8 +9,31 @@ from .executor import (
     ExecutionReport,
     PlanExecutor,
     TraceEvent,
-    execute_plan,
 )
 from .straggler import StragglerDetector, StragglerInjector, rebalance_two_pods
 
 __all__ = [k for k in dir() if not k.startswith("_")]
+
+# ----------------------------------------------------------------------
+# Deprecated entry point(s): kept working through a PEP 562 shim that
+# warns once and defers to the implementation module.  New code goes
+# through repro.api (Session / Platform / Policy) — see docs/API.md.
+_DEPRECATED = {
+    "execute_plan": (
+        "repro.runtime.executor",
+        "repro.api.Session.execute()",
+    ),
+}
+__all__ += list(_DEPRECATED)
+
+
+def __getattr__(name):
+    if name in _DEPRECATED:  # lazy: keep repro.api out of base imports
+        from repro.api._deprecate import deprecated_getattr
+
+        return deprecated_getattr(__name__, _DEPRECATED)(name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_DEPRECATED))

@@ -2,7 +2,30 @@ from .pod_scheduler import (
     Request,
     place_two_pods,
     place_two_pods_equal,
-    serve_online,
 )
 
 __all__ = [k for k in dir() if not k.startswith("_")]
+
+# ----------------------------------------------------------------------
+# Deprecated entry point(s): kept working through a PEP 562 shim that
+# warns once and defers to the implementation module.  New code goes
+# through repro.api (Session / Platform / Policy) — see docs/API.md.
+_DEPRECATED = {
+    "serve_online": (
+        "repro.serve.pod_scheduler",
+        "repro.api.Session.serve(stream)",
+    ),
+}
+__all__ += list(_DEPRECATED)
+
+
+def __getattr__(name):
+    if name in _DEPRECATED:  # lazy: keep repro.api out of base imports
+        from repro.api._deprecate import deprecated_getattr
+
+        return deprecated_getattr(__name__, _DEPRECATED)(name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_DEPRECATED))

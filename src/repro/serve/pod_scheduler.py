@@ -82,13 +82,17 @@ def serve_online(
     the :class:`~repro.online.scheduler.OnlineReport`; per-request
     latency is ``report.futures[i].latency`` keyed by submission order
     (``rid`` carries the request id).
+
+    Each request becomes one shared :class:`repro.api.problem.Problem`
+    with the pod's α, so the 𝓛 that SJF admission sorts by and the
+    length the event loop pays down come from the same object.
     """
-    from repro.core.graph import TaskTree
+    from repro.api.problem import Problem
 
     lengths = request_lengths(cfg, requests) / float(flop_rate)
     reqs = [
         TreeRequest(
-            tree=TaskTree(parent=np.array([-1]), lengths=np.array([L])),
+            tree=Problem.from_lengths([L], alpha, name=f"request-{r.rid}"),
             arrival=float(a),
             tenant=int(tenants[i]) if tenants is not None else 0,
             rid=r.rid,

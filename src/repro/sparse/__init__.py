@@ -24,7 +24,7 @@ from .multifrontal import (
     solve,
 )
 from .ordering import min_degree, nested_dissection_2d
-from .plan import ExecutionPlan, make_plan, pm_projected_makespan, replan_elastic
+from .plan import ExecutionPlan, pm_projected_makespan, replan_elastic
 from .symbolic import (
     SymbolicFactorization,
     Supernode,
@@ -34,3 +34,27 @@ from .symbolic import (
 )
 
 __all__ = [k for k in dir() if not k.startswith("_")]
+
+# ----------------------------------------------------------------------
+# Deprecated entry point(s): kept working through a PEP 562 shim that
+# warns once and defers to the implementation module.  New code goes
+# through repro.api (Session / Platform / Policy) — see docs/API.md.
+_DEPRECATED = {
+    "make_plan": (
+        "repro.sparse.plan",
+        "repro.api.Session.plan(policy='greedy')",
+    ),
+}
+__all__ += list(_DEPRECATED)
+
+
+def __getattr__(name):
+    if name in _DEPRECATED:  # lazy: keep repro.api out of base imports
+        from repro.api._deprecate import deprecated_getattr
+
+        return deprecated_getattr(__name__, _DEPRECATED)(name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_DEPRECATED))

