@@ -14,7 +14,9 @@ registry drives them all and writes one uniform, machine-diffable
 so the perf trajectory across PRs is a JSON diff, not a CSV scrape.
 The legacy ``name,us_per_call,derived`` CSV still lands on stdout.
 
-``python -m benchmarks.run [--smoke] [--only NAME ...] [--outdir DIR]``
+``python -m benchmarks.run [--smoke] [--only NAME ...] [--outdir DIR]
+[--list]`` — JSONs land in ``bench_out/`` by default (kept out of the
+repo root); ``--list`` prints the registry and exits.
 """
 from __future__ import annotations
 
@@ -47,6 +49,7 @@ REGISTRY: Tuple[BenchSpec, ...] = (
     BenchSpec("kernel", "frontal Pallas", "benchmarks.bench_kernel"),
     BenchSpec("executor", "PM vs PROPORTIONAL, measured", "benchmarks.bench_executor"),
     BenchSpec("moe_pm", "beyond-paper", "benchmarks.bench_moe_pm"),
+    BenchSpec("memory", "memory-bounded: pm vs pm-bounded budget sweep (arXiv:1210.2580)", "benchmarks.bench_memory", smoke_aware=True),
 )
 
 
@@ -109,8 +112,18 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument(
         "--only", nargs="*", help="run only these bench names", default=None
     )
-    ap.add_argument("--outdir", default=".", help="where BENCH_*.json land")
+    ap.add_argument(
+        "--outdir", default="bench_out", help="where BENCH_*.json land"
+    )
+    ap.add_argument(
+        "--list", action="store_true", help="print the registry and exit"
+    )
     args = ap.parse_args(argv)
+
+    if args.list:
+        for spec in REGISTRY:
+            print(f"{spec.name:20s} {spec.title}  [{spec.module}]")
+        return
 
     names = {s.name for s in REGISTRY}
     if args.only:

@@ -2,8 +2,14 @@
 (Guermouche, Marchal, Simon, Vivien; INRIA RR-8616, 2014) as a multi-pod
 JAX framework.
 
+The public facade re-exports lazily (PEP 562), so ``import repro;
+repro.Session(...)`` works without importing ``repro.api`` explicitly —
+and without paying the facade's import cost when only a sub-package is
+needed.
+
 Sub-packages:
-  core         the paper: PM optimal schedule, Alg 11, Alg 12, baselines, §7
+  core         the paper: PM optimal schedule, Alg 11, Alg 12, baselines, §7,
+               memory-bounded traversals (arXiv:1210.2580 / 1410.0329)
   online       event-driven online scheduler (state machine, admission, replay)
   sparse       multifrontal Cholesky (the paper's application) + PM planning
   kernels      Pallas TPU kernels (frontal partial Cholesky, flash attention)
@@ -15,3 +21,39 @@ Sub-packages:
 """
 
 __version__ = "1.0.0"
+
+# Facade names resolvable directly on the package (PEP 562 lazy import:
+# touching them is what imports repro.api).
+_FACADE = frozenset(
+    {
+        "DeviceMesh",
+        "MulticoreCluster",
+        "Platform",
+        "Policy",
+        "Problem",
+        "Resources",
+        "RunReport",
+        "Schedule",
+        "Session",
+        "SharedMemory",
+        "ShareEntry",
+        "accepts_memory_budget",
+        "as_platform",
+        "as_problem",
+        "available_policies",
+        "get_policy",
+        "register_policy",
+    }
+)
+
+
+def __getattr__(name: str):
+    if name in _FACADE:
+        from repro import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | _FACADE)

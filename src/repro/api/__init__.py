@@ -24,12 +24,14 @@ from .platform import (
     DeviceMesh,
     MulticoreCluster,
     Platform,
+    Resources,
     SharedMemory,
     as_platform,
 )
 from .policy import (
     POLICY_REGISTRY,
     Policy,
+    accepts_memory_budget,
     available_policies,
     get_policy,
     register_policy,
@@ -45,11 +47,13 @@ __all__ = [
     "Platform",
     "Policy",
     "Problem",
+    "Resources",
     "RunReport",
     "Schedule",
     "Session",
     "SharedMemory",
     "ShareEntry",
+    "accepts_memory_budget",
     "as_platform",
     "as_problem",
     "available_policies",

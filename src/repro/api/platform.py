@@ -11,16 +11,63 @@ count / :class:`~repro.online.events.ProcessorPool` (the online core),
 * ``node_sizes()``          — the 𝓡-constraint structure (one entry per
   multicore node; a single entry means no placement constraint)
 * ``to_mesh()`` / ``devices()`` — the JAX bridge for real execution
+* ``resources()``           — the typed resource view: the compute
+  profile *plus* per-node memory capacities in bytes (the dimension the
+  memory-bounded policies and admission plan against)
 
 New platforms subclass :class:`Platform` in their own file; ``Session``
-only speaks the protocol, so nothing else changes.
+only speaks the protocol, so nothing else changes.  ``resources()`` has
+a default (infinite memory per node), so pre-existing third-party
+subclasses keep planning exactly as before.
 """
 from __future__ import annotations
 
 import math
+import os
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.core.profiles import Profile
+
+
+def _host_memory_bytes() -> float:
+    """Physical memory of this host, with a conservative fallback."""
+    try:
+        return float(os.sysconf("SC_PAGE_SIZE") * os.sysconf("SC_PHYS_PAGES"))
+    except (AttributeError, OSError, ValueError):
+        return float(16 * 2**30)
+
+
+@dataclass(frozen=True)
+class Resources:
+    """Typed resource view of a platform: compute *and* memory.
+
+    ``compute`` is the share profile p(t) (what the PM theory schedules);
+    ``memory`` is one capacity in bytes per memory node — one entry for a
+    shared-memory machine, one per node for a cluster, one per device for
+    a mesh.  ``inf`` entries mean "unconstrained" (the pre-memory-model
+    default every :class:`Platform` subclass inherits).
+    """
+
+    compute: Profile
+    memory: Tuple[float, ...]
+
+    def __post_init__(self) -> None:
+        if not self.memory or any(m <= 0 for m in self.memory):
+            raise ValueError("memory capacities must be positive")
+
+    def total_memory(self) -> float:
+        return float(sum(self.memory))
+
+    def min_node_memory(self) -> float:
+        return float(min(self.memory))
+
+    def describe(self) -> str:
+        def fmt(m: float) -> str:
+            return "inf" if math.isinf(m) else f"{m / 2**30:.1f}GiB"
+
+        mems = "+".join(fmt(m) for m in self.memory)
+        return f"p(0)={self.compute.p_at(0.0):g}, mem={mems}"
 
 
 class Platform:
@@ -49,6 +96,18 @@ class Platform:
     @property
     def n_nodes(self) -> int:
         return len(self.node_sizes())
+
+    def resources(self) -> Resources:
+        """The typed resource view (compute profile + per-node memory).
+
+        The default reports *infinite* memory per node so that platforms
+        written before the resource model keep planning unchanged;
+        built-ins override it with real byte counts.
+        """
+        return Resources(
+            compute=self.profile(),
+            memory=tuple(math.inf for _ in self.node_sizes()),
+        )
 
     def to_pool(self):
         """A live :class:`~repro.online.events.ProcessorPool` sized to
@@ -102,19 +161,32 @@ class SharedMemory(Platform):
 
     name = "shared"
 
-    def __init__(self, p: Union[float, int, Profile]) -> None:
+    def __init__(
+        self,
+        p: Union[float, int, Profile],
+        *,
+        memory: Optional[float] = None,
+    ) -> None:
         if isinstance(p, Profile):
             self._profile = p
         else:
             if p <= 0:
                 raise ValueError("capacity must be positive")
             self._profile = Profile.constant(float(p))
+        # memory in bytes; default = this host's physical RAM (a shared-
+        # memory machine *is* the host the process plans on)
+        self._memory = float(memory) if memory is not None else _host_memory_bytes()
+        if self._memory <= 0:
+            raise ValueError("memory must be positive")
 
     def capacity(self) -> float:
         return self._profile.p_at(0.0)
 
     def profile(self) -> Profile:
         return self._profile
+
+    def resources(self) -> Resources:
+        return Resources(compute=self._profile, memory=(self._memory,))
 
 
 class MulticoreCluster(Platform):
@@ -127,17 +199,38 @@ class MulticoreCluster(Platform):
 
     name = "cluster"
 
-    def __init__(self, nodes: Sequence[float]) -> None:
+    def __init__(
+        self,
+        nodes: Sequence[float],
+        *,
+        node_memory: Optional[Union[float, Sequence[float]]] = None,
+    ) -> None:
         sizes = tuple(float(s) for s in nodes)
         if not sizes or any(s <= 0 for s in sizes):
             raise ValueError("cluster needs positive node sizes")
         self._sizes = sizes
+        if node_memory is None:
+            mems = tuple(_host_memory_bytes() for _ in sizes)
+        elif isinstance(node_memory, (int, float)):
+            mems = tuple(float(node_memory) for _ in sizes)
+        else:
+            mems = tuple(float(m) for m in node_memory)
+            if len(mems) != len(sizes):
+                raise ValueError(
+                    f"{len(sizes)} nodes but {len(mems)} memory capacities"
+                )
+        if any(m <= 0 for m in mems):
+            raise ValueError("node memory must be positive")
+        self._memory = mems
 
     def capacity(self) -> float:
         return float(sum(self._sizes))
 
     def node_sizes(self) -> Tuple[float, ...]:
         return self._sizes
+
+    def resources(self) -> Resources:
+        return Resources(compute=self.profile(), memory=self._memory)
 
     @property
     def homogeneous(self) -> bool:
@@ -180,6 +273,33 @@ class DeviceMesh(Platform):
             return float(self._plan_devices)
         return float(len(self.devices()))
 
+    def resources(self) -> Resources:
+        """Per-device memory from ``device.memory_stats()``.
+
+        Forged host platforms (``xla_force_host_platform_device_count``)
+        and CPU backends don't expose memory stats — those devices fall
+        back to an equal slice of the host's physical RAM, so planning
+        against a forged mesh still sees finite, realistic capacities.
+        """
+        devs = self.devices()
+        fallback = _host_memory_bytes() / max(len(devs), 1)
+        mems: List[float] = []
+        for d in devs:
+            m: Optional[float] = None
+            stats = getattr(d, "memory_stats", None)
+            if callable(stats):
+                try:
+                    s = stats()
+                    m = float(
+                        s.get("bytes_limit")
+                        or s.get("bytes_reservable_limit")
+                        or 0.0
+                    )
+                except Exception:
+                    m = None
+            mems.append(m if m else fallback)
+        return Resources(compute=self.profile(), memory=tuple(mems))
+
     def describe(self) -> str:
         n = self._plan_devices
         if n is None and self._devices is not None:
@@ -215,6 +335,7 @@ __all__ = [
     "DeviceMesh",
     "MulticoreCluster",
     "Platform",
+    "Resources",
     "SharedMemory",
     "as_platform",
 ]

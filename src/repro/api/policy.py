@@ -21,10 +21,20 @@ Built-ins:
 ``two-node``           Algorithm 11 on 2 homogeneous nodes (placement)
 ``hetero``             Algorithm 12 FPTAS on 2 heterogeneous nodes
 ``k-node``             beyond-paper greedy on k homogeneous nodes
+``pm-bounded``         PM under a memory budget: segmented Liu-order
+                       traversal (arXiv:1210.2580 / 1410.0329); equals
+                       ``pm`` when ``memory_budget=inf``
 =====================  =================================================
+
+``memory_budget`` is a *planning dimension* of the registry: a policy
+that declares the keyword (``pm-bounded``) actively plans within it;
+for any other policy ``Session.plan(..., memory_budget=B)`` certifies
+the produced schedule against ``B`` and refuses plans that exceed it.
 """
 from __future__ import annotations
 
+import inspect
+import math
 from typing import Dict, List, Optional, Type
 
 from repro.core.baselines import (
@@ -69,6 +79,14 @@ def get_policy(name: str, **opts) -> "Policy":
 
 def available_policies() -> List[str]:
     return sorted(POLICY_REGISTRY)
+
+
+def accepts_memory_budget(name: str) -> bool:
+    """Whether the policy plans *within* a memory budget (declares the
+    ``memory_budget`` keyword), as opposed to only being certified
+    against one after the fact."""
+    cls = POLICY_REGISTRY[name]
+    return "memory_budget" in inspect.signature(cls.__init__).parameters
 
 
 # ----------------------------------------------------------------------
@@ -170,6 +188,61 @@ class DivisiblePolicy(Policy):
             labels=problem.tree.labels,
             profile_steps=self._steps(platform),
         )
+
+
+# ----------------------------------------------------------------------
+@register_policy("pm-bounded")
+class PMBoundedPolicy(Policy):
+    """PM shares under a memory budget (arXiv:1210.2580 / 1410.0329).
+
+    When the fluid PM schedule's peak resident bytes fit in the budget
+    (always true for ``memory_budget=inf``, or when the problem carries
+    no footprints) the plan *is* the PM optimum.  Otherwise the tree is
+    traversed in segments: each subtree whose PM peak fits on top of the
+    bytes already retained runs as one full-machine PM segment, the rest
+    recurses into Liu's memory-minimizing child order.  Raises when the
+    budget is below Liu's sequential minimum — no schedule of the tree
+    fits at all.
+    """
+
+    def __init__(self, memory_budget: float = math.inf) -> None:
+        self.memory_budget = float(memory_budget)
+        if self.memory_budget <= 0:
+            raise ValueError("memory_budget must be positive")
+
+    def plan(self, problem: Problem, platform: Platform) -> Schedule:
+        budget = self.memory_budget
+        fp = problem.memory_footprints()
+        base = PMPolicy().plan(problem, platform)
+        base.policy = self.name
+        if fp is not None:
+            base.attach_memory(problem, budget=budget)
+        if base.memory is None or base.memory.peak <= budget * (1 + 1e-12):
+            base.meta["segments"] = 1
+            return base
+
+        from repro.core.memory import pm_bounded_schedule
+
+        p = self._require_constant(platform, "the memory-bounded planner")
+        es, info = pm_bounded_schedule(
+            problem.tree, problem.alpha, p, fp, budget
+        )
+        sched = Schedule.from_explicit(
+            es,
+            policy=self.name,
+            platform=platform.describe(),
+            capacity=p,
+            fluid_makespan=self._fluid(problem, platform),
+            labels=problem.tree.labels,
+            profile_steps=self._steps(platform),
+            meta={
+                "memory_budget": budget,
+                "segments": info["segments"],
+                "sequential_min": info["sequential_min"],
+            },
+        )
+        sched.attach_memory(problem, budget=budget)
+        return sched
 
 
 # ----------------------------------------------------------------------
@@ -374,6 +447,7 @@ class KNodePolicy(Policy):
 __all__ = [
     "POLICY_REGISTRY",
     "Policy",
+    "accepts_memory_budget",
     "available_policies",
     "get_policy",
     "register_policy",

@@ -37,9 +37,12 @@ class Problem:
     name: str = "problem"
     symb: Optional[object] = None  # SymbolicFactorization
     matrix: Optional[object] = None  # the (permuted) sparse matrix symb describes
+    footprints: Optional[object] = None  # memory.Footprints override (generic trees)
     _eq: Optional[np.ndarray] = field(
         default=None, repr=False, compare=False
     )
+    _fp: Optional[object] = field(default=None, repr=False, compare=False)
+    _seq_peak: Optional[float] = field(default=None, repr=False, compare=False)
 
     def __post_init__(self) -> None:
         self.alpha = float(self.alpha)
@@ -65,6 +68,53 @@ class Problem:
     def total_work(self) -> float:
         return float(self.tree.lengths.sum())
 
+    # -- memory model ---------------------------------------------------
+    def memory_footprints(self):
+        """Per-task :class:`~repro.core.memory.Footprints` in bytes.
+
+        An explicit override (``footprints=`` — the generic non-sparse
+        hook) wins; otherwise the footprints are derived once from the
+        symbolic factorization (front order → front / factor /
+        contribution-block bytes, zero-padded over a virtual root).
+        ``None`` when the problem carries no memory model — every memory
+        feature then degrades to "unconstrained".
+        """
+        if self.footprints is not None:
+            if self.footprints.n != self.n:
+                raise ValueError(
+                    f"footprints cover {self.footprints.n} tasks, "
+                    f"tree has {self.n}"
+                )
+            return self.footprints
+        if self.symb is None:
+            return None
+        if self._fp is None:
+            self._fp = self.symb.footprints().padded(self.n)
+        return self._fp
+
+    def min_peak_memory(self) -> float:
+        """Least bytes any schedule of this problem needs (Liu's
+        sequential bound) — the admission-control number.  0.0 when the
+        problem has no memory model."""
+        if self._seq_peak is None:
+            fp = self.memory_footprints()
+            if fp is None:
+                self._seq_peak = 0.0
+            else:
+                from repro.core.memory import sequential_peak
+
+                self._seq_peak = sequential_peak(self.tree, fp)
+        return self._seq_peak
+
+    def pm_peak_memory(self) -> float:
+        """Peak bytes of the fluid PM schedule (0.0 without a model)."""
+        fp = self.memory_footprints()
+        if fp is None:
+            return 0.0
+        from repro.core.memory import pm_peak
+
+        return pm_peak(self.tree, self.alpha, fp)
+
     def fluid_makespan(self, profile: Union[Profile, float]) -> float:
         """Theorem-6 lower bound under a profile (or constant capacity)."""
         if not isinstance(profile, Profile):
@@ -87,14 +137,22 @@ class Problem:
             name=self.name,
             symb=self.symb,
             matrix=self.matrix,
+            footprints=self.footprints,
         )
 
     # -- constructors ---------------------------------------------------
     @classmethod
     def from_tree(
-        cls, tree: TaskTree, alpha: float, name: str = "tree"
+        cls,
+        tree: TaskTree,
+        alpha: float,
+        name: str = "tree",
+        *,
+        footprints=None,
     ) -> "Problem":
-        return cls(tree=tree, alpha=alpha, name=name)
+        """From a bare tree; ``footprints`` is the generic memory-model
+        override for trees that are not factorizations."""
+        return cls(tree=tree, alpha=alpha, name=name, footprints=footprints)
 
     @classmethod
     def from_symbolic(

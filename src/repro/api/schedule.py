@@ -29,10 +29,16 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.memory import MemoryTimeline, memory_timeline
 from repro.core.profiles import Profile
 from repro.core.schedule import ExplicitSchedule
 
-_JSON_VERSION = 1
+# v1: no memory timeline.  v2: adds the optional "memory" block
+# (resident-bytes steps + peak + per-node peaks + planning budget).
+# Loading stays backward compatible: v1 documents deserialize with
+# ``memory=None``.
+_JSON_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 
 # ----------------------------------------------------------------------
@@ -73,6 +79,7 @@ class Schedule:
     fluid_makespan: float
     discretized: bool = False
     profile_steps: Optional[List[Tuple[float, float]]] = None
+    memory: Optional[MemoryTimeline] = None
     meta: Dict = field(default_factory=dict)
     _plan: Optional[object] = field(default=None, repr=False, compare=False)
 
@@ -97,6 +104,51 @@ class Schedule:
             return Profile.of([(d, p) for d, p in self.profile_steps])
         return Profile.constant(self.capacity)
 
+    # -- the memory dimension -------------------------------------------
+    def _task_spans(self) -> Dict[int, Tuple[float, float]]:
+        spans: Dict[int, Tuple[float, float]] = {}
+        for e in self.entries:
+            t0, t1 = spans.get(e.task, (e.start, e.end))
+            spans[e.task] = (min(t0, e.start), max(t1, e.end))
+        return spans
+
+    def attach_memory(self, problem, budget: float = math.inf) -> "Schedule":
+        """Compute and attach the resident-bytes timeline of this
+        schedule under ``problem``'s footprints.
+
+        No-op (returns ``self``) when the problem has no memory model or
+        the schedule is placement-only; the memory accessors then stay
+        unavailable rather than reporting a fake zero.
+        """
+        fp = problem.memory_footprints()
+        if fp is None or not self.entries:
+            return self
+        self.memory = memory_timeline(
+            problem.tree.parent, self._task_spans(), fp, budget=budget
+        )
+        return self
+
+    def _require_memory(self) -> MemoryTimeline:
+        if self.memory is None:
+            raise ValueError(
+                f"schedule from policy {self.policy!r} has no memory "
+                f"timeline; plan via Session with a problem that carries "
+                f"footprints, or call attach_memory(problem)"
+            )
+        return self.memory
+
+    def memory_profile(self) -> List[Tuple[float, float]]:
+        """Resident bytes over time as ``(t, bytes)`` steps."""
+        return list(self._require_memory().steps)
+
+    def peak_memory(self) -> float:
+        """Peak resident bytes (includes the extend-add transient)."""
+        return self._require_memory().peak
+
+    def node_peaks(self) -> Dict[int, float]:
+        """Per-memory-node peak bytes (``{0: peak}`` without placement)."""
+        return dict(self._require_memory().node_peaks)
+
     # -- §4 validation (shared across every producing policy) -----------
     def to_explicit(self) -> ExplicitSchedule:
         es = ExplicitSchedule(self.alpha)
@@ -106,11 +158,17 @@ class Schedule:
         return es
 
     def validate(self, problem, rtol: float = 1e-6) -> None:
-        """Assert the §4 validity predicates against ``problem``.
+        """Assert the §4 validity predicates against ``problem``, plus
+        the memory predicate when a timeline is attached.
 
         Placement-only schedules (the §6 partitioners return node
         assignments, not share functions) have no entries to check and
         raise so a caller cannot mistake "nothing checked" for "valid".
+
+        The memory check re-derives the resident-bytes timeline from the
+        entries and the problem's footprints (so a tampered serialized
+        timeline cannot certify itself) and asserts the peak stays
+        within the recorded planning budget.
         """
         if not self.entries:
             raise ValueError(
@@ -118,6 +176,21 @@ class Schedule:
                 f"there are no share pieces to validate"
             )
         self.to_explicit().validate(problem.tree, self.profile(), rtol)
+        if self.memory is not None:
+            fp = problem.memory_footprints()
+            if fp is not None:
+                fresh = memory_timeline(
+                    problem.tree.parent, self._task_spans(), fp
+                )
+                assert fresh.peak <= self.memory.peak * (1 + rtol) + 1.0, (
+                    f"memory timeline understates the peak: recomputed "
+                    f"{fresh.peak:.6g} B > recorded {self.memory.peak:.6g} B"
+                )
+            if math.isfinite(self.memory.budget):
+                assert self.memory.peak <= self.memory.budget * (1 + rtol), (
+                    f"peak memory {self.memory.peak:.6g} B exceeds the "
+                    f"planning budget {self.memory.budget:.6g} B"
+                )
 
     # -- executor bridge ------------------------------------------------
     def to_execution_plan(self):
@@ -199,6 +272,7 @@ class Schedule:
                 [e.task, e.label, e.start, e.end, e.share]
                 for e in self.entries
             ],
+            "memory": self.memory.to_dict() if self.memory is not None else None,
             "meta": self.meta,
         }
 
@@ -209,9 +283,10 @@ class Schedule:
     def from_dict(cls, d: Dict) -> "Schedule":
         if d.get("kind") != "schedule":
             raise ValueError("not a serialized Schedule")
-        if d.get("version") != _JSON_VERSION:
+        if d.get("version") not in _READABLE_VERSIONS:
             raise ValueError(f"unsupported schedule version {d.get('version')}")
         steps = d.get("profile_steps")
+        mem = d.get("memory")  # absent in v1 documents
         return cls(
             alpha=float(d["alpha"]),
             policy=str(d["policy"]),
@@ -232,6 +307,7 @@ class Schedule:
                 if steps is not None
                 else None
             ),
+            memory=MemoryTimeline.from_dict(mem) if mem else None,
             meta=dict(d.get("meta", {})),
         )
 

@@ -24,12 +24,13 @@ Terminal verbs:
 """
 from __future__ import annotations
 
+import math
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .platform import Platform, as_platform
-from .policy import get_policy
+from .policy import accepts_memory_budget, get_policy
 from .problem import Problem, as_problem
 from .schedule import RunReport, Schedule
 
@@ -80,11 +81,52 @@ class Session:
         return self.problem
 
     # -- planning -------------------------------------------------------
-    def plan(self, policy: str = "pm", **opts) -> "Session":
+    def plan(
+        self,
+        policy: str = "pm",
+        *,
+        memory_budget: Optional[float] = None,
+        **opts,
+    ) -> "Session":
         """Plan with a registered policy; the Schedule lands on
-        ``self.schedule`` (chain ``.execute()`` / inspect directly)."""
+        ``self.schedule`` (chain ``.execute()`` / inspect directly).
+
+        ``memory_budget`` (bytes) is the resource dimension: a
+        budget-aware policy (``pm-bounded``) plans within it; any other
+        policy's schedule is *certified* against it and a violating plan
+        raises instead of being returned.  A finite budget that cannot
+        be checked at all — a placement-only schedule, or a problem
+        without footprints — also raises, so "planned with a budget"
+        always means "the budget was actually enforced".  When the
+        problem carries footprints the schedule always gets its
+        resident-bytes timeline attached (``schedule.memory_profile()``
+        / ``peak_memory()``).
+        """
         problem = self._require_problem()
-        self.schedule = get_policy(policy, **opts).plan(problem, self.platform)
+        if memory_budget is not None and accepts_memory_budget(policy):
+            opts["memory_budget"] = memory_budget
+        sched = get_policy(policy, **opts).plan(problem, self.platform)
+        budget = math.inf if memory_budget is None else float(memory_budget)
+        if sched.entries and sched.memory is None:
+            sched.attach_memory(problem, budget=budget)
+        if memory_budget is not None and math.isfinite(budget):
+            if sched.memory is None:
+                why = (
+                    "the schedule is placement-only"
+                    if not sched.entries
+                    else "the problem carries no memory footprints"
+                )
+                raise ValueError(
+                    f"cannot certify policy {policy!r} against a memory "
+                    f"budget: {why}"
+                )
+            if sched.memory.peak > budget * (1 + 1e-9):
+                raise ValueError(
+                    f"policy {policy!r} needs {sched.memory.peak:.4g} B "
+                    f"peak memory, over the {budget:.4g} B budget; plan "
+                    f"with 'pm-bounded' to stay within it"
+                )
+        self.schedule = sched
         return self
 
     @property
@@ -99,6 +141,13 @@ class Session:
         return self.schedule
 
     # -- terminal verbs -------------------------------------------------
+    def _memory_capacity(self, memory_budget: Optional[float]) -> float:
+        """The byte pool online admission gates on: an explicit budget,
+        else the platform's real memory."""
+        if memory_budget is not None:
+            return float(memory_budget)
+        return self.platform.resources().total_memory()
+
     def simulate(
         self,
         *,
@@ -107,6 +156,7 @@ class Session:
         policy: Optional[str] = None,
         speedup_floor: bool = False,
         until: float = np.inf,
+        memory_budget: Optional[float] = None,
     ) -> RunReport:
         """Run the problem through the discrete-event online scheduler.
 
@@ -115,7 +165,10 @@ class Session:
         policy when that is a share rule, else ``pm``.  ``events`` are
         ``(time, payload)`` pairs of online events (SetCapacity,
         SetNodeSpeed, TaskFailure); a non-constant platform profile is
-        injected automatically as SetCapacity steps.
+        injected automatically as SetCapacity steps.  Admission is
+        memory-aware: a problem whose minimal peak cannot fit the
+        platform's memory (or the ``memory_budget`` override) is
+        refused.
         """
         from repro.online.events import SetCapacity
         from repro.online.scheduler import SHARE_POLICIES, OnlineScheduler
@@ -131,6 +184,7 @@ class Session:
             policy=policy,
             noise=noise,
             speedup_floor=speedup_floor,
+            memory_capacity=self._memory_capacity(memory_budget),
         )
         profile = self.platform.profile()
         t_acc = 0.0
@@ -147,6 +201,7 @@ class Session:
             platform=self.platform.describe(),
             tree_id=0,
         )
+        realized.attach_memory(problem)
         return RunReport(
             kind="simulated",
             schedule=realized,
@@ -213,6 +268,10 @@ class Session:
                 "n_dispatches": float(report.n_dispatches),
                 "n_devices": float(report.n_devices),
                 "projected_seconds": report.projected_seconds(),
+                # the memory dimension, measured on the real buffers vs.
+                # projected from the plan's timeline
+                "measured_peak_bytes": report.measured_peak_bytes,
+                "projected_peak_bytes": report.projected_peak_bytes,
             },
             detail=report,
             artifact=fact,
@@ -228,6 +287,7 @@ class Session:
         noise=None,
         speedup_floor: bool = False,
         alpha: Optional[float] = None,
+        memory_budget: Optional[float] = None,
     ) -> RunReport:
         """Serve a stream of tree requests on this platform.
 
@@ -235,6 +295,12 @@ class Session:
         ``(tree_or_problem, arrival)`` / ``(tree_or_problem, arrival,
         tenant)`` tuples.  α comes from the loaded problem, the
         ``alpha`` argument, or the first Problem in the stream.
+
+        Admission is memory-aware: the platform's memory (or the
+        ``memory_budget`` override) is a pool; a tree is only admitted
+        when its minimal peak fits next to the already-admitted trees'
+        peaks (delayed otherwise), and a tree that can never fit is
+        refused at submission.
         """
         from repro.online.queue import TreeRequest, serve_trees
 
@@ -282,6 +348,7 @@ class Session:
             max_concurrent=max_concurrent,
             noise=noise,
             speedup_floor=speedup_floor,
+            memory_capacity=self._memory_capacity(memory_budget),
         )
         realized = Schedule.from_online(
             report,

@@ -15,10 +15,19 @@ admission queue decides which pending trees are admitted and when:
 ``max_concurrent`` bounds the number of simultaneously admitted trees
 (processor-sharing degree); ``1`` serves trees one at a time on the
 whole pool.
+
+Admission is also *memory-aware* (arXiv:1210.2580 / 1410.0329: a tree
+traversal needs a minimum resident size or it does not fit): each
+pending tree carries its minimal peak bytes (Liu's sequential bound),
+and the queue only hands out trees whose peak fits in the bytes the
+scheduler still has free — others wait, regardless of the concurrency
+bound.  Trees that could never fit are refused at submission
+(:meth:`~repro.online.scheduler.OnlineScheduler.submit`).
 """
 from __future__ import annotations
 
 import itertools
+import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
@@ -51,6 +60,7 @@ class _Pending:
     tenant: int
     eq: float
     seq: int
+    mem: float = 0.0  # minimal peak bytes (Liu's sequential bound)
 
 
 class AdmissionQueue:
@@ -74,24 +84,40 @@ class AdmissionQueue:
     def __bool__(self) -> bool:
         return bool(self._pending)
 
-    def push(self, tree_id: int, tenant: int, eq: float) -> None:
+    def push(
+        self, tree_id: int, tenant: int, eq: float, mem: float = 0.0
+    ) -> None:
         self._pending.append(
-            _Pending(tree_id, tenant, float(eq), next(self._seq))
+            _Pending(tree_id, tenant, float(eq), next(self._seq), float(mem))
         )
 
-    def can_admit(self, n_admitted: int) -> bool:
+    @staticmethod
+    def _fits(p: _Pending, mem_free: float) -> bool:
+        return p.mem <= mem_free * (1 + 1e-12) + 1e-9
+
+    def can_admit(self, n_admitted: int, mem_free: float = math.inf) -> bool:
+        """Whether some pending tree may be admitted now: the
+        concurrency bound has room *and* at least one pending tree's
+        peak fits in ``mem_free`` bytes."""
         if not self._pending:
             return False
-        return (
-            self.max_concurrent is None or n_admitted < self.max_concurrent
-        )
+        if self.max_concurrent is not None and n_admitted >= self.max_concurrent:
+            return False
+        return any(self._fits(p, mem_free) for p in self._pending)
 
     def pop_next(
-        self, service_by_tenant: Optional[Dict[int, float]] = None
+        self,
+        service_by_tenant: Optional[Dict[int, float]] = None,
+        mem_free: float = math.inf,
     ) -> _Pending:
-        """Remove and return the next tree to admit under the policy."""
-        if not self._pending:
-            raise IndexError("admission queue is empty")
+        """Remove and return the next tree to admit under the policy,
+        considering only trees whose peak memory fits (a too-big tree is
+        delayed, not a head-of-line blocker)."""
+        fitting = [
+            j for j, p in enumerate(self._pending) if self._fits(p, mem_free)
+        ]
+        if not fitting:
+            raise IndexError("no admissible tree (queue empty or none fits)")
         if self.policy == "fifo":
             key = lambda p: (p.seq,)
         elif self.policy == "sjf":
@@ -99,7 +125,7 @@ class AdmissionQueue:
         else:  # fair
             svc = service_by_tenant or {}
             key = lambda p: (svc.get(p.tenant, 0.0), p.seq)
-        best = min(range(len(self._pending)), key=lambda j: key(self._pending[j]))
+        best = min(fitting, key=lambda j: key(self._pending[j]))
         return self._pending.pop(best)
 
 
@@ -113,6 +139,7 @@ def serve_trees(
     max_concurrent: Optional[int] = None,
     noise=None,
     speedup_floor: bool = False,
+    memory_capacity: Optional[float] = None,
 ):
     """Serve a stream of tree requests; returns the :class:`OnlineReport`.
 
@@ -120,6 +147,8 @@ def serve_trees(
     OnlineScheduler); ``admission`` the queue discipline.  Static share
     plans cannot overlap trees (frozen shares of two trees would break
     the §4 resource bound), so ``static`` forces ``max_concurrent=1``.
+    ``memory_capacity`` (bytes) makes admission memory-aware: admitted
+    trees' minimal peaks must fit in the pool together.
     """
     from repro.api.problem import as_problem  # deferred: api ← online
     from .scheduler import OnlineScheduler  # deferred: queue ← scheduler
@@ -133,6 +162,7 @@ def serve_trees(
         noise=noise,
         speedup_floor=speedup_floor,
         admission=AdmissionQueue(admission, max_concurrent),
+        memory_capacity=memory_capacity,
     )
     for req in requests:
         sched.submit(

@@ -190,6 +190,10 @@ class OnlineScheduler:
     noise : duration-noise model (events.NoNoise/LognormalNoise/...).
     speedup_floor : §7's realistic floor — rate s (not s^α) for s < 1.
     admission : AdmissionQueue; defaults to unbounded FIFO.
+    memory_capacity : bytes of memory the pool offers; admitted trees'
+        minimal peaks (Liu's sequential bound) must fit in it together.
+        A tree that can never fit is refused at ``submit``; one that
+        cannot fit *now* waits in admission.  None / inf = unbounded.
     """
 
     def __init__(
@@ -201,6 +205,7 @@ class OnlineScheduler:
         noise=None,
         speedup_floor: bool = False,
         admission: Optional[AdmissionQueue] = None,
+        memory_capacity: Optional[float] = None,
     ) -> None:
         if policy not in SHARE_POLICIES:
             raise ValueError(f"unknown share policy {policy!r}")
@@ -220,6 +225,13 @@ class OnlineScheduler:
             # resource bound — static serving is inherently sequential.
             # Re-wrap rather than mutate the caller's queue.
             self.admission = AdmissionQueue(self.admission.policy, 1)
+
+        self.memory_capacity = (
+            math.inf if memory_capacity is None else float(memory_capacity)
+        )
+        if self.memory_capacity <= 0:
+            raise ValueError("memory_capacity must be positive")
+        self._mem_peak: Dict[int, float] = {}  # tree_id → minimal peak bytes
 
         self.clock = VirtualClock()
         self.events = EventQueue()
@@ -257,6 +269,7 @@ class OnlineScheduler:
         """
         from repro.api.problem import Problem  # deferred: api ← online
 
+        mem_peak = 0.0
         if isinstance(tree, Problem):
             problem = tree
             if abs(problem.alpha - self.alpha) > 1e-12:
@@ -265,6 +278,13 @@ class OnlineScheduler:
                     f"alpha={self.alpha}"
                 )
             tree, eq_root = problem.tree, problem.eq_root
+            mem_peak = problem.min_peak_memory()
+            if mem_peak > self.memory_capacity * (1 + 1e-12):
+                raise ValueError(
+                    f"problem {problem.name!r} needs at least "
+                    f"{mem_peak:.4g} B resident (Liu bound), over the "
+                    f"pool's {self.memory_capacity:.4g} B — refused"
+                )
         else:
             eq_root = float(
                 tree_equivalent_lengths(tree, self.alpha)[tree.root]
@@ -283,6 +303,7 @@ class OnlineScheduler:
         self._next_base += tree.n
         self.runs[tree_id] = run
         self.eq_nominal[tree_id] = eq_root
+        self._mem_peak[tree_id] = mem_peak
         self.inject(t, Arrival(tree_id))
         return run.future
 
@@ -389,6 +410,7 @@ class OnlineScheduler:
                 payload.tree_id,
                 run.future.tenant,
                 self.eq_nominal[payload.tree_id],
+                mem=self._mem_peak.get(payload.tree_id, 0.0),
             )
         elif isinstance(payload, (SetCapacity, SetNodeSpeed)):
             self.pool.apply(payload)
@@ -410,9 +432,18 @@ class OnlineScheduler:
         else:
             raise TypeError(f"unknown event payload {type(payload).__name__}")
 
+    def _mem_free(self) -> float:
+        """Bytes of the memory pool not reserved by admitted trees."""
+        if not math.isfinite(self.memory_capacity):
+            return math.inf
+        in_use = sum(self._mem_peak.get(k, 0.0) for k in self.admitted)
+        return self.memory_capacity - in_use
+
     def _try_admit(self) -> None:
-        while self.admission.can_admit(len(self.admitted)):
-            pend = self.admission.pop_next(self.service_by_tenant)
+        while self.admission.can_admit(len(self.admitted), self._mem_free()):
+            pend = self.admission.pop_next(
+                self.service_by_tenant, self._mem_free()
+            )
             run = self.runs[pend.tree_id]
             self.admitted.append(pend.tree_id)
             run.admit(self.clock.now)

@@ -106,6 +106,11 @@ class ExecutionReport:
     n_dispatches: int = 0
     n_devices: int = 1
     interpret: bool = True
+    # the memory dimension: peak bytes of the real host-side buffers
+    # (fronts + retained panels + pending Schur updates) vs. the peak the
+    # plan's resident-bytes timeline projects at the executed dtype
+    measured_peak_bytes: float = 0.0
+    projected_peak_bytes: float = 0.0
 
     # ------------------------------------------------------------------
     def total_flops(self) -> float:
@@ -191,6 +196,12 @@ class ExecutionReport:
             + (f"{a_fit:9.3f}" if a_fit is not None else "      n/a")
             + f"  (planned {self.plan_alpha})",
         ]
+        if self.projected_peak_bytes > 0:
+            lines.append(
+                f"peak memory        {self.measured_peak_bytes/2**20:9.2f} MiB"
+                f" measured vs {self.projected_peak_bytes/2**20:.2f} MiB"
+                f" projected"
+            )
         return "\n".join(lines)
 
 
@@ -369,24 +380,48 @@ class PlanExecutor:
         if warmup:
             self.warmup(ds, groups)
 
+        # projected peak: the plan's resident-bytes timeline at this dtype
+        from repro.sparse.plan import plan_memory_timeline
+
+        tree = symb.task_tree()
+        fp = symb.footprints(itemsize=self.dtype.itemsize).padded(tree.n)
+        projected_peak = plan_memory_timeline(self.plan, tree, fp).peak
+
         updates: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         panels: List[Optional[np.ndarray]] = [None] * symb.n_supernodes
         trace: List[TraceEvent] = []
         n_disp = 0
+        # measured peak over the real buffers: retained panels + pending
+        # Schur updates + the dispatch's assembled fronts (the executor's
+        # realization of the schedule's memory timeline)
+        self._mem_panels = 0.0
+        self._mem_updates = 0.0
+        mem_peak = 0.0
         t_run0 = time.perf_counter()
 
         for d in ds:
             fronts = []
+            consumed = 0.0
             for s in d.supernodes:
                 sn = symb.supernodes[s]
                 kids = self._children[s]
                 assert all(panels[c] is not None for c in kids), (
                     "plan wave order violates tree precedence"
                 )
-                f = assemble_front_np(
-                    acsc, sn, [updates.pop(c) for c in kids]
-                )
+                kid_updates = []
+                for c in kids:
+                    rows_c, upd_c = updates.pop(c)
+                    consumed += float(rows_c.nbytes + upd_c.nbytes)
+                    kid_updates.append((rows_c, upd_c))
+                f = assemble_front_np(acsc, sn, kid_updates)
                 fronts.append(f.astype(self.dtype, copy=False))
+            fronts_bytes = float(sum(f.nbytes for f in fronts))
+            # extend-add transient: consumed CBs (still counted in
+            # _mem_updates) coexist with the assembled fronts
+            mem_peak = max(
+                mem_peak, self._mem_panels + self._mem_updates + fronts_bytes
+            )
+            self._mem_updates -= consumed
 
             mp, nbp = d.key
             disp_devs = self._dispatch_devices(d, groups)
@@ -413,6 +448,13 @@ class PlanExecutor:
                         pad_front_np(f, symb.supernodes[s].nb, self.dtype)
                         for s, f in zip(d.supernodes, fronts)
                     ]
+                )
+                mem_peak = max(
+                    mem_peak,
+                    self._mem_panels
+                    + self._mem_updates
+                    + fronts_bytes
+                    + float(batch.nbytes),
                 )
                 out = self._run_batch(batch, nbp, disp_devs)
                 t1 = time.perf_counter() - t_run0
@@ -449,6 +491,8 @@ class PlanExecutor:
             n_dispatches=n_disp,
             n_devices=len(self.devices),
             interpret=self.interpret,
+            measured_peak_bytes=float(mem_peak),
+            projected_peak_bytes=float(projected_peak),
         )
         return Factorization(symb=symb, panels=panels), report  # type: ignore[arg-type]
 
@@ -457,8 +501,10 @@ class PlanExecutor:
         complement for the parent's extend-add."""
         sn = self.symb.supernodes[s]
         panels[s] = panel
+        self._mem_panels += float(panel.nbytes)
         if sn.m > sn.nb:
             updates[s] = (sn.rows[sn.nb :], schur)
+            self._mem_updates += float(sn.rows[sn.nb :].nbytes + schur.nbytes)
 
 
 def execute_plan(

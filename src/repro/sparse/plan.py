@@ -237,3 +237,17 @@ def pm_projected_makespan(
     """Fluid PM makespan under an arbitrary step profile (Theorem 6)."""
     eq = tree_equivalent_lengths(tree, alpha)
     return profile.time_for_work(eq[tree.root], alpha)
+
+
+def plan_memory_timeline(plan: ExecutionPlan, tree: TaskTree, fp):
+    """Resident-bytes timeline the plan projects under ``fp`` footprints.
+
+    ``fp`` is a :class:`~repro.core.memory.Footprints` over the tree's
+    task indices (pad symbolic footprints over a virtual root first).
+    This is the number the executor compares its measured buffer peak
+    against.
+    """
+    from repro.core.memory import memory_timeline
+
+    spans = {t.task: (t.start, t.end) for t in plan.tasks}
+    return memory_timeline(tree.parent, spans, fp)

@@ -114,6 +114,22 @@ class SymbolicFactorization:
             labels=np.concatenate([labels, [-1]]),
         )
 
+    def footprints(self, itemsize: int = 8):
+        """Per-supernode :class:`~repro.core.memory.Footprints` in bytes.
+
+        One entry per supernode (same order as :meth:`task_tree`; pad
+        with :meth:`Footprints.padded` when the tree gained a virtual
+        root).  ``itemsize`` is the factor dtype width — 8 for float64,
+        4 for float32.
+        """
+        from repro.core.memory import footprints_from_fronts
+
+        return footprints_from_fronts(
+            [s.m for s in self.supernodes],
+            [s.nb for s in self.supernodes],
+            itemsize=itemsize,
+        )
+
 
 def partial_factor_flops(m: int, nb: int) -> float:
     """Flops of eliminating nb pivots from an m×m symmetric front.

@@ -1,6 +1,8 @@
 """The repro.api facade: equivalence with the legacy entry points,
-JSON round-trip (golden file), deprecation shims, extensibility."""
+JSON round-trip (golden file), deprecation shims, extensibility, and
+the resource model (memory as a first-class dimension)."""
 import json
+import math
 import os
 import warnings
 
@@ -339,6 +341,206 @@ def test_replay_routes_through_problem():
     assert plan.fluid_makespan == pytest.approx(
         prob.eq_root / 8**prob.alpha, rel=1e-12
     )
+
+
+# ----------------------------------------------------------------------
+# The resource model: memory as a first-class dimension
+# ----------------------------------------------------------------------
+def synthetic_footprints(n: int, scale: float = 10.0):
+    from repro.core.memory import Footprints
+
+    return Footprints(
+        np.full(n, scale), np.full(n, scale / 10), np.full(n, scale / 5)
+    )
+
+
+def test_platform_resources_views():
+    r = SharedMemory(8).resources()
+    assert len(r.memory) == 1
+    assert np.isfinite(r.total_memory()) and r.total_memory() > 0
+    rc = MulticoreCluster([4, 4], node_memory=2**30).resources()
+    assert rc.memory == (float(2**30), float(2**30))
+    assert rc.min_node_memory() == float(2**30)
+    with pytest.raises(ValueError):
+        MulticoreCluster([4, 4], node_memory=[1.0])
+
+    class Bare(Platform):  # third-party subclass predating the model
+        def capacity(self):
+            return 4.0
+
+    assert np.isinf(Bare().resources().total_memory())  # default hook
+    dm = DeviceMesh().resources()  # forged-host / CPU fallback
+    assert all(np.isfinite(m) and m > 0 for m in dm.memory)
+
+
+def test_problem_footprints_from_symbolic_and_override(rng):
+    prob = grid_problem(11)
+    fp = prob.memory_footprints()
+    assert fp is not None and fp.n == prob.n
+    sn = prob.symb.supernodes[0]
+    assert fp.front_bytes[0] == sn.m * sn.m * 8
+    assert prob.min_peak_memory() > 0
+    assert prob.pm_peak_memory() >= prob.min_peak_memory() * (1 - 1e-9)
+    tree = random_assembly_tree(20, rng)
+    bare = Problem.from_tree(tree, ALPHA)
+    assert bare.memory_footprints() is None
+    assert bare.min_peak_memory() == 0.0
+    rich = Problem.from_tree(
+        tree, ALPHA, footprints=synthetic_footprints(tree.n)
+    )
+    assert rich.min_peak_memory() > 0
+
+
+def test_pm_bounded_inf_budget_matches_pm(rng):
+    """The acceptance anchor: budget=inf is exactly the PM optimum."""
+    for _ in range(5):
+        tree = random_assembly_tree(int(rng.integers(30, 200)), rng)
+        p = float(rng.integers(8, 64))
+        s = Session(SharedMemory(p)).load(tree, ALPHA)
+        mk_pm = s.plan("pm").schedule.makespan
+        mk_b = s.plan("pm-bounded", memory_budget=math.inf).schedule.makespan
+        assert mk_b == pytest.approx(mk_pm, rel=1e-12)
+    prob = grid_problem(15)  # with real footprints, same equality
+    s = Session(SharedMemory(64)).load(prob)
+    assert s.plan(
+        "pm-bounded", memory_budget=math.inf
+    ).schedule.makespan == pytest.approx(
+        s.plan("pm").schedule.makespan, rel=1e-12
+    )
+
+
+def test_pm_bounded_finite_budget_certified():
+    """The validator certifies peak <= budget while pure PM exceeds it."""
+    prob = grid_problem(15)
+    s = Session(SharedMemory(32)).load(prob)
+    pm = s.plan("pm").schedule
+    budget = 0.5 * (prob.min_peak_memory() + pm.peak_memory())
+    assert pm.peak_memory() > budget  # pure PM busts the budget
+    bounded = s.plan("pm-bounded", memory_budget=budget).schedule
+    assert bounded.peak_memory() <= budget
+    bounded.validate(prob)  # §4 predicates + the memory predicate
+    assert bounded.makespan >= pm.makespan  # the price of the budget
+    assert bounded.meta["segments"] > 1
+    assert bounded.memory_profile()  # the serializable timeline
+    assert bounded.node_peaks() == {0: bounded.peak_memory()}
+    # a budget-unaware policy is *certified* against the dimension
+    with pytest.raises(ValueError):
+        s.plan("pm", memory_budget=budget)
+    # below the sequential minimum nothing fits
+    with pytest.raises(ValueError):
+        s.plan("pm-bounded", memory_budget=0.5 * prob.min_peak_memory())
+
+
+def test_finite_budget_refused_when_uncheckable(rng):
+    """A finite budget that cannot be certified raises instead of being
+    silently ignored — placement-only schedules and footprint-less
+    problems alike."""
+    tree = random_assembly_tree(40, rng)
+    bare = Session(SharedMemory(16)).load(tree, ALPHA)
+    with pytest.raises(ValueError, match="no memory footprints"):
+        bare.plan("pm", memory_budget=1e6)
+    placed = Session(MulticoreCluster([16, 16])).load(
+        Problem.from_tree(tree, ALPHA, footprints=synthetic_footprints(tree.n))
+    )
+    with pytest.raises(ValueError, match="placement-only"):
+        placed.plan("two-node", memory_budget=1e6)
+    # an infinite budget stays a no-op on both
+    assert bare.plan("pm", memory_budget=math.inf).schedule is not None
+    assert placed.plan("two-node", memory_budget=math.inf).schedule is not None
+
+
+def test_schedule_memory_survives_json_roundtrip():
+    prob = grid_problem(11)
+    s = Session(SharedMemory(16)).load(prob)
+    pm_pk = s.plan("pm").schedule.peak_memory()
+    budget = 0.5 * (prob.min_peak_memory() + pm_pk)
+    sched = s.plan("pm-bounded", memory_budget=budget).schedule
+    rt = Schedule.from_json(sched.to_json())
+    assert rt.peak_memory() == sched.peak_memory()
+    assert rt.memory.budget == budget
+    assert rt.memory_profile() == sched.memory_profile()
+    rt.validate(prob)  # deserialized timeline re-checked against entries
+
+
+def test_schedule_json_version1_still_loads():
+    """Old (pre-memory) schedule files keep loading; bad versions don't."""
+    path = os.path.join(DATA, "schedule_golden.json")
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["version"] == 2 and doc["memory"] is not None
+    legacy = dict(doc)
+    legacy["version"] = 1
+    legacy.pop("memory")
+    old = Schedule.from_dict(legacy)
+    assert old.memory is None
+    assert old.makespan == doc["makespan"]
+    with pytest.raises(ValueError):
+        old.peak_memory()  # unavailable, not silently zero
+    # and a v1 document round-trips through the v2 writer
+    assert Schedule.from_json(old.to_json()).makespan == old.makespan
+    with pytest.raises(ValueError):
+        Schedule.from_dict({**doc, "version": 99})
+
+
+def test_serve_memory_admission_delays_and_refuses(rng):
+    tree = random_assembly_tree(30, rng)
+    fp = synthetic_footprints(tree.n)
+    p1 = Problem.from_tree(tree, ALPHA, name="t1", footprints=fp)
+    p2 = Problem.from_tree(tree, ALPHA, name="t2", footprints=fp)
+    peak = p1.min_peak_memory()
+    # pool fits one tree at a time: the second is delayed, not refused
+    rep = Session(SharedMemory(8)).serve(
+        [(p1, 0.0), (p2, 0.0)], memory_budget=1.5 * peak
+    )
+    fut = rep.detail.futures
+    assert fut[0].t_admit == 0.0
+    assert fut[1].t_admit >= fut[0].t_done - 1e-9
+    # unconstrained, both are admitted immediately
+    rep2 = Session(SharedMemory(8)).serve([(p1, 0.0), (p2, 0.0)])
+    assert rep2.detail.futures[1].t_admit == 0.0
+    assert rep2.makespan < rep.makespan
+    # a tree that can never fit is refused at submission
+    with pytest.raises(ValueError):
+        Session(SharedMemory(8)).serve([(p1, 0.0)], memory_budget=0.5 * peak)
+    with pytest.raises(ValueError):
+        Session(SharedMemory(8)).load(p1).simulate(memory_budget=0.5 * peak)
+
+
+def test_simulate_attaches_memory_timeline():
+    prob = grid_problem(11)
+    rep = Session(SharedMemory(16)).load(prob).simulate(policy="pm")
+    assert rep.schedule.peak_memory() > 0
+    rep.schedule.validate(prob)
+
+
+def test_execute_reports_measured_vs_projected_peak():
+    prob = grid_problem(9)
+    rep = (
+        Session(DeviceMesh(plan_devices=8))
+        .load(prob)
+        .plan("greedy")
+        .execute(warmup=False)
+    )
+    assert rep.metrics["projected_peak_bytes"] > 0
+    # measured includes the kernel's 128-aligned padding, so it can only
+    # be above the model's projection
+    assert (
+        rep.metrics["measured_peak_bytes"]
+        >= rep.metrics["projected_peak_bytes"]
+    )
+    assert "peak memory" in rep.detail.summary()
+
+
+def test_top_level_lazy_facade():
+    import repro
+
+    assert repro.Session is Session
+    assert repro.SharedMemory is SharedMemory
+    assert repro.Schedule is Schedule
+    assert "available_policies" in dir(repro)
+    assert "pm-bounded" in repro.available_policies()
+    with pytest.raises(AttributeError):
+        repro.not_a_facade_name
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,247 @@
+"""Core memory model: resident-bytes timelines, Liu's traversal, and the
+budget-bounded PM schedule (arXiv:1210.2580 / 1410.0329 adaptations)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.graph import TaskTree
+from repro.core.memory import (
+    Footprints,
+    footprints_from_fronts,
+    memory_timeline,
+    pm_bounded_schedule,
+    pm_peak,
+    sequential_peak,
+    sequential_traversal,
+    zero_footprints,
+)
+from repro.core.pm import tree_equivalent_lengths
+from repro.core.profiles import Profile
+from repro.core.trees import random_assembly_tree
+
+ALPHA = 0.9
+
+
+def random_footprints(n: int, rng) -> Footprints:
+    front = rng.uniform(4.0, 40.0, n)
+    nbfrac = rng.uniform(0.2, 0.9, n)
+    factor = front * nbfrac * 0.5
+    cb = front * (1 - nbfrac) ** 2
+    return Footprints(front, factor, cb)
+
+
+# ----------------------------------------------------------------------
+# Timeline semantics
+# ----------------------------------------------------------------------
+def test_timeline_hand_example():
+    """Two leaves into a root: fronts, factors, CBs and the extend-add
+    transient, checked by hand."""
+    tree = TaskTree(parent=np.array([-1, 0, 0]), lengths=np.ones(3))
+    fp = Footprints(
+        front_bytes=np.array([10.0, 4.0, 6.0]),
+        factor_bytes=np.array([3.0, 1.0, 2.0]),
+        cb_bytes=np.array([0.0, 2.0, 3.0]),
+    )
+    spans = {1: (0.0, 1.0), 2: (0.0, 2.0), 0: (2.0, 3.0)}
+    tl = memory_timeline(tree.parent, spans, fp)
+    assert tl.usage_at(0.5) == 10.0  # both leaf fronts
+    assert tl.usage_at(1.5) == 9.0  # leaf 1 → factor+CB, leaf 2 front
+    # at t=2 the root's front coexists with both CBs before consuming
+    # them: 3 (factor1+cb1) + 5 (factor2+cb2) + 10 (root front) = 18
+    assert tl.peak == 18.0
+    assert tl.usage_at(2.5) == 13.0  # CBs consumed
+    assert tl.usage_at(3.5) == 6.0  # factors remain
+    assert tl.node_peaks == {0: 18.0}
+
+
+def test_timeline_invariant_under_reparameterization(rng):
+    """The peak only depends on span interleaving, not durations —
+    work-time and wall-clock spans agree."""
+    tree = random_assembly_tree(40, rng)
+    fp = random_footprints(tree.n, rng)
+    order = tree.topo_order()
+    spans = {int(t): (float(k), float(k + 1)) for k, t in enumerate(order)}
+    warped = {
+        t: (math.sqrt(1 + a) - 1, math.sqrt(1 + b) - 1)
+        for t, (a, b) in spans.items()
+    }
+    a = memory_timeline(tree.parent, spans, fp)
+    b = memory_timeline(tree.parent, warped, fp)
+    assert a.peak == pytest.approx(b.peak, rel=1e-12)
+
+
+def test_empty_and_zero_footprints(rng):
+    tree = random_assembly_tree(10, rng)
+    assert memory_timeline(tree.parent, {}, zero_footprints(tree.n)).peak == 0.0
+    spans = {i: (0.0, 1.0) for i in range(tree.n)}
+    assert (
+        memory_timeline(tree.parent, spans, zero_footprints(tree.n)).peak == 0.0
+    )
+
+
+def test_footprints_helpers():
+    fp = footprints_from_fronts([4, 10], [4, 3], itemsize=8)
+    assert fp.front_bytes.tolist() == [128.0, 800.0]  # m² · 8
+    assert fp.factor_bytes.tolist() == [128.0, 240.0]  # m·nb · 8
+    assert fp.cb_bytes.tolist() == [0.0, 392.0]  # (m−nb)² · 8
+    assert fp.padded(3).n == 3 and fp.padded(3).front_bytes[2] == 0.0
+    assert fp.take([1]).front_bytes.tolist() == [800.0]
+    with pytest.raises(ValueError):
+        fp.padded(1)
+    with pytest.raises(ValueError):
+        Footprints(np.array([1.0]), np.array([-1.0]), np.array([0.0]))
+
+
+# ----------------------------------------------------------------------
+# Liu's sequential traversal
+# ----------------------------------------------------------------------
+def _postorder_spans(tree, seq):
+    """Unit-time sequential spans following the traversal's child order."""
+    order = []
+    stack = [(tree.root, False)]
+    ch_order = seq.child_order
+    while stack:
+        node, expanded = stack.pop()
+        if expanded:
+            order.append(node)
+        else:
+            stack.append((node, True))
+            for c in reversed(ch_order[node]):
+                stack.append((c, False))
+    return {int(t): (float(k), float(k + 1)) for k, t in enumerate(order)}
+
+
+def test_liu_traversal_matches_its_own_timeline(rng):
+    """The analytic peak equals the timeline of actually executing the
+    traversal one task at a time."""
+    for _ in range(5):
+        tree = random_assembly_tree(int(rng.integers(10, 80)), rng)
+        fp = random_footprints(tree.n, rng)
+        seq = sequential_traversal(tree, fp)
+        tl = memory_timeline(tree.parent, _postorder_spans(tree, seq), fp)
+        assert tl.peak == pytest.approx(seq.min_peak(tree.root), rel=1e-12)
+
+
+def test_liu_order_beats_random_postorders(rng):
+    """No randomly shuffled postorder does better than Liu's order."""
+    for _ in range(3):
+        tree = random_assembly_tree(30, rng)
+        fp = random_footprints(tree.n, rng)
+        best = sequential_peak(tree, fp)
+        ch = tree.children_lists()
+        for _ in range(20):
+            order = []
+            stack = [(tree.root, False)]
+            while stack:
+                node, expanded = stack.pop()
+                if expanded:
+                    order.append(node)
+                else:
+                    stack.append((node, True))
+                    kids = list(ch[node])
+                    rng.shuffle(kids)
+                    for c in kids:
+                        stack.append((c, False))
+            spans = {
+                int(t): (float(k), float(k + 1)) for k, t in enumerate(order)
+            }
+            tl = memory_timeline(tree.parent, spans, fp)
+            assert tl.peak >= best * (1 - 1e-12)
+
+
+def test_pm_peak_at_least_sequential_min(rng):
+    """Parallelism never undercuts the sequential bound."""
+    for _ in range(5):
+        tree = random_assembly_tree(int(rng.integers(10, 120)), rng)
+        fp = random_footprints(tree.n, rng)
+        assert pm_peak(tree, ALPHA, fp) >= sequential_peak(tree, fp) * (
+            1 - 1e-9
+        )
+
+
+# ----------------------------------------------------------------------
+# Budget-bounded PM
+# ----------------------------------------------------------------------
+def test_pm_bounded_budget_sweep(rng):
+    """Across the whole feasible range: §4-valid, within budget, and
+    makespan degrades monotonically as the budget tightens."""
+    tree = random_assembly_tree(60, rng)
+    fp = random_footprints(tree.n, rng)
+    p = 16.0
+    lo = sequential_peak(tree, fp)
+    hi = max(pm_peak(tree, ALPHA, fp), lo * 1.01)
+    prev_makespan = None
+    for frac in (1.0, 0.7, 0.4, 0.1, 0.0):
+        budget = lo + frac * (hi - lo)
+        es, info = pm_bounded_schedule(tree, ALPHA, p, fp, budget)
+        es.validate(tree, Profile.constant(p))
+        spans = {
+            i: (es.start_time(i), es.completion_time(i))
+            for i in range(tree.n)
+            if es.pieces.get(i)
+        }
+        tl = memory_timeline(tree.parent, spans, fp)
+        assert tl.peak <= budget * (1 + 1e-9)
+        mk = es.makespan()
+        if prev_makespan is not None:
+            assert mk >= prev_makespan * (1 - 1e-9)
+        prev_makespan = mk
+    # the fluid optimum is recovered at infinite budget
+    es, info = pm_bounded_schedule(tree, ALPHA, p, fp, math.inf)
+    fluid = tree_equivalent_lengths(tree, ALPHA)[tree.root] / p**ALPHA
+    assert es.makespan() == pytest.approx(fluid, rel=1e-12)
+    assert info["segments"] == 1
+
+
+def test_pm_bounded_respects_budget_with_heavy_outputs(rng):
+    """Generic footprints with factor+CB > front (a task whose output
+    outweighs its working set): the budget must hold for the
+    post-completion residency too, not just the transient."""
+    for _ in range(3):
+        tree = random_assembly_tree(40, rng)
+        n = tree.n
+        fp = Footprints(
+            np.full(n, 1.0),
+            rng.uniform(5.0, 15.0, n),  # outputs dwarf the fronts
+            rng.uniform(0.0, 3.0, n),
+        )
+        lo = sequential_peak(tree, fp)
+        # all factors stay resident, so the sequential minimum is at
+        # least the total retained bytes
+        assert lo >= fp.total_factor()
+        for frac in (1.0, 0.3, 0.0):
+            hi = max(pm_peak(tree, ALPHA, fp), lo * 1.01)
+            budget = lo + frac * (hi - lo)
+            es, _ = pm_bounded_schedule(tree, ALPHA, 8.0, fp, budget)
+            spans = {
+                i: (es.start_time(i), es.completion_time(i))
+                for i in range(tree.n)
+                if es.pieces.get(i)
+            }
+            tl = memory_timeline(tree.parent, spans, fp)
+            assert tl.peak <= budget * (1 + 1e-9)
+
+
+def test_pm_bounded_infeasible_budget_raises(rng):
+    tree = random_assembly_tree(25, rng)
+    fp = random_footprints(tree.n, rng)
+    with pytest.raises(ValueError):
+        pm_bounded_schedule(
+            tree, ALPHA, 8.0, fp, 0.5 * sequential_peak(tree, fp)
+        )
+
+
+def test_timeline_json_roundtrip(rng):
+    from repro.core.memory import MemoryTimeline
+
+    tree = random_assembly_tree(20, rng)
+    fp = random_footprints(tree.n, rng)
+    order = tree.topo_order()
+    spans = {int(t): (float(k), float(k + 1)) for k, t in enumerate(order)}
+    tl = memory_timeline(tree.parent, spans, fp, budget=123.0)
+    rt = MemoryTimeline.from_dict(tl.to_dict())
+    assert rt.peak == tl.peak and rt.budget == 123.0
+    assert rt.steps == tl.steps and rt.node_peaks == tl.node_peaks
+    inf_tl = memory_timeline(tree.parent, spans, fp)
+    assert MemoryTimeline.from_dict(inf_tl.to_dict()).budget == math.inf
