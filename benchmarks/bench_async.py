@@ -1,0 +1,136 @@
+"""A/B: async futures executor vs the legacy wave barrier, stragglers on.
+
+The controlled experiment behind retiring the wave runner: both modes
+execute the *same* plan on the same mesh with the same injected
+per-front delays (:class:`repro.runtime.straggler.FrontDelays`), and
+share every numeric path, so the factors are bit-identical and the only
+difference is dispatch discipline.  Under the barrier a straggling front
+stalls its whole wave; under the futures runner only its ancestors wait,
+so the measured makespan gap is pure barrier overhead (§3–§4's
+instantaneous re-share, realized on discrete device groups).
+
+The async run is capped at the wave run's measured peak bytes
+(``memory_cap_bytes``), so the speedup is *not* bought with extra
+memory: the summary's ``peak_ok`` asserts async peak ≤ wave peak.
+
+Rows: one per (mode, injection) run, ``us_per_call`` = measured
+makespan.  Summary payload: the CI-gated A/B verdict (``speedup``,
+``bit_identical``, ``peak_ok``) plus latency observables.
+
+Forge a mesh to make group placement matter (what CI's forged job does):
+``XLA_FLAGS=--xla_force_host_platform_device_count=8
+python -m benchmarks.bench_async``
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.runtime.executor import PlanExecutor
+from repro.runtime.straggler import FrontDelays
+from repro.sparse import (
+    analyze,
+    grid_laplacian_2d,
+    make_plan,
+    nested_dissection_2d,
+    permute_symmetric,
+)
+
+SEED = 1
+CONFIG = {
+    "alpha": 0.9,
+    "grid": 13,
+    "grid_smoke": 11,
+    "relax": 1,
+    "n_stragglers": 4,
+    "delay_s": 0.2,
+}
+
+
+def _bit_identical(fa, fb) -> bool:
+    return all(
+        np.array_equal(p, q) for p, q in zip(fa.panels, fb.panels)
+    )
+
+
+def run(smoke: bool = False) -> Tuple[List[Dict], Dict]:
+    grid = CONFIG["grid_smoke"] if smoke else CONFIG["grid"]
+    ndev = len(jax.devices())
+    a = grid_laplacian_2d(grid)
+    ap = permute_symmetric(a, nested_dissection_2d(grid))
+    symb = analyze(ap, relax=CONFIG["relax"])
+    plan = make_plan(symb.task_tree(), ndev, alpha=CONFIG["alpha"])
+    delays = FrontDelays.random(
+        range(symb.n_supernodes),
+        CONFIG["n_stragglers"],
+        CONFIG["delay_s"],
+        seed=SEED,
+    )
+
+    def execute(mode: str, injected: bool, **kw):
+        ex = PlanExecutor(
+            symb,
+            plan,
+            mode=mode,
+            delay_fn=delays if injected else None,
+            **kw,
+        )
+        return ex.run(ap)
+
+    rows: List[Dict] = []
+
+    def record(tag: str, report) -> None:
+        rows.append(
+            {
+                "name": tag,
+                "us_per_call": round(report.measured_makespan * 1e6, 1),
+                "derived": (
+                    f"dispatches={report.n_dispatches}"
+                    f" peak_bytes={report.measured_peak_bytes:.0f}"
+                    f" ndev={report.n_devices}"
+                ),
+            }
+        )
+
+    # clean baseline pair: no injection, measures pure dispatch overhead
+    fw0, rw0 = execute("waves", injected=False)
+    fa0, ra0 = execute("async", injected=False)
+    record("waves_clean", rw0)
+    record("async_clean", ra0)
+
+    # the straggled A/B — async capped at the wave path's measured peak
+    fw, rw = execute("waves", injected=True)
+    fa, ra = execute(
+        "async", injected=True, memory_cap_bytes=rw.measured_peak_bytes
+    )
+    record("waves_straggled", rw)
+    record("async_straggled", ra)
+
+    lat = ra.mean_ready_latency()
+    summary = {
+        "ndev": ndev,
+        "grid": grid,
+        "n_fronts": symb.n_supernodes,
+        "injected_delay_total_s": delays.total(),
+        "speedup": rw.measured_makespan / ra.measured_makespan,
+        "speedup_clean": rw0.measured_makespan / ra0.measured_makespan,
+        "bit_identical": bool(
+            _bit_identical(fw, fa) and _bit_identical(fw0, fa0)
+        ),
+        "peak_ok": bool(ra.measured_peak_bytes <= rw.measured_peak_bytes),
+        "waves_ms": rw.measured_makespan * 1e3,
+        "async_ms": ra.measured_makespan * 1e3,
+        "waves_peak_bytes": rw.measured_peak_bytes,
+        "async_peak_bytes": ra.measured_peak_bytes,
+        "mean_ready_latency_ms": None if lat is None else lat * 1e3,
+    }
+    return rows, summary
+
+
+if __name__ == "__main__":
+    rows, summary = run()
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    print(summary)

@@ -14,7 +14,7 @@ forge a mesh to see group placement matter:
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import jax
 import numpy as np
@@ -37,7 +37,7 @@ SEED = None
 CONFIG = {"alpha": ALPHA, "grid": GRID, "plan_devices": NDEV_PLAN}
 
 
-def run() -> List[Dict]:
+def run() -> Tuple[List[Dict], Dict]:
     a = grid_laplacian_2d(GRID)
     ap = permute_symmetric(a, nested_dissection_2d(GRID))
     symb = analyze(ap, relax=2)
@@ -45,6 +45,7 @@ def run() -> List[Dict]:
     dense = ap.toarray()
 
     rows: List[Dict] = []
+    summary: Dict = {"ndev": len(jax.devices()), "grid": GRID}
     for strategy in ("pm", "proportional"):
         plan = make_plan(tree, NDEV_PLAN, alpha=ALPHA, strategy=strategy)
         t0 = time.time()
@@ -70,9 +71,23 @@ def run() -> List[Dict]:
                 ),
             }
         )
-    return rows
+        summary[strategy] = {
+            "measured_ms": report.measured_makespan * 1e3,
+            "projected": plan.makespan,
+            "fluid": plan.fluid_makespan,
+            "dispatches": report.n_dispatches,
+            "peak_bytes": report.measured_peak_bytes,
+            "rel_err": rel,
+            "max_rel_err_ok": bool(rel < 1e-5),
+        }
+    summary["proportional_over_pm_measured"] = (
+        summary["proportional"]["measured_ms"] / summary["pm"]["measured_ms"]
+    )
+    return rows, summary
 
 
 if __name__ == "__main__":
-    for r in run():
+    rows, summary = run()
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    print(summary)

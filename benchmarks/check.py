@@ -1,0 +1,193 @@
+"""Benchmark regression gate: BENCH_*.json vs committed baselines.
+
+CI used to assert benchmark invariants in inline workflow heredocs; this
+module makes the gate a versioned, locally runnable program.  Each file
+in ``benchmarks/baselines/<name>.json`` declares checks against the
+matching ``bench_out/BENCH_<name>.json`` document::
+
+    {"checks": [
+        {"path": "summary.speedup", "min": 1.0},
+        {"path": "summary.bit_identical", "equals": true},
+        {"path": "summary.fidelity_online_over_fluid",
+         "near": 1.0, "tol": 1e-6},
+        {"path": "summary.ratios.static_over_pm",
+         "baseline": 1.31, "rel_tol": 0.5}
+    ]}
+
+Supported predicates (one per check, plus the shared ``path``):
+
+- ``equals``  — exact match (booleans/strings/ints);
+- ``near``/``tol`` — |value − near| ≤ tol;
+- ``min`` / ``max`` — one-sided bounds (inclusive);
+- ``gt`` / ``lt``  — strict one-sided bounds;
+- ``baseline``/``rel_tol`` — committed reference value, fail when the
+  measured value drifts beyond ``rel_tol`` relatively (two-sided, so it
+  catches both regressions and silently-improved baselines going stale).
+
+Dimensionless ratios and invariant flags make good baselines; raw
+wall-clock numbers on shared CI runners do not — gate on what the paper
+model predicts (speedups, fidelity, budget compliance), not on seconds.
+
+Usage (what the CI gate job runs)::
+
+    python -m benchmarks.check --bench-dir bench_out [--require name ...]
+
+Exit status is non-zero when any check fails or a required document is
+missing.  A markdown verdict table lands on stdout and — when
+``$GITHUB_STEP_SUMMARY`` is set — on the workflow step summary.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+
+@dataclass
+class Verdict:
+    bench: str
+    path: str
+    rule: str
+    value: Any
+    ok: bool
+    detail: str = ""
+
+
+def _lookup(doc: Dict, path: str) -> Any:
+    cur: Any = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(path)
+        cur = cur[part]
+    return cur
+
+
+def _apply(check: Dict, value: Any) -> tuple[bool, str, str]:
+    """Returns (ok, rule description, detail)."""
+    if "equals" in check:
+        want = check["equals"]
+        return value == want, f"== {want!r}", f"got {value!r}"
+    if "near" in check:
+        want, tol = float(check["near"]), float(check.get("tol", 1e-9))
+        err = abs(float(value) - want)
+        return err <= tol, f"≈ {want} (tol {tol:g})", f"err {err:.3g}"
+    if "baseline" in check:
+        base = float(check["baseline"])
+        rel = float(check.get("rel_tol", 0.25))
+        drift = abs(float(value) - base) / max(abs(base), 1e-12)
+        return (
+            drift <= rel,
+            f"within {rel:.0%} of {base:g}",
+            f"drift {drift:.1%}",
+        )
+    if "min" in check:
+        return float(value) >= float(check["min"]), f"≥ {check['min']}", ""
+    if "max" in check:
+        return float(value) <= float(check["max"]), f"≤ {check['max']}", ""
+    if "gt" in check:
+        return float(value) > float(check["gt"]), f"> {check['gt']}", ""
+    if "lt" in check:
+        return float(value) < float(check["lt"]), f"< {check['lt']}", ""
+    raise ValueError(f"check has no known predicate: {check}")
+
+
+def check_doc(bench: str, doc: Dict, spec: Dict) -> List[Verdict]:
+    out: List[Verdict] = []
+    for check in spec.get("checks", []):
+        path = check["path"]
+        try:
+            value = _lookup(doc, path)
+        except KeyError:
+            out.append(
+                Verdict(bench, path, "present", None, False, "path missing")
+            )
+            continue
+        try:
+            ok, rule, detail = _apply(check, value)
+        except (TypeError, ValueError) as e:
+            ok, rule, detail = False, "valid", f"{type(e).__name__}: {e}"
+        shown = f"{value:.4g}" if isinstance(value, float) else repr(value)
+        out.append(Verdict(bench, path, rule, shown, ok, detail))
+    return out
+
+
+def render_markdown(verdicts: List[Verdict]) -> str:
+    lines = [
+        "## Benchmark gate",
+        "",
+        "| bench | metric | rule | value | verdict |",
+        "|---|---|---|---|---|",
+    ]
+    for v in verdicts:
+        mark = "✅" if v.ok else f"❌ {v.detail}".rstrip()
+        lines.append(
+            f"| {v.bench} | `{v.path}` | {v.rule} | {v.value} | {mark} |"
+        )
+    n_fail = sum(not v.ok for v in verdicts)
+    lines += [
+        "",
+        (
+            f"**{n_fail} check(s) failed** out of {len(verdicts)}."
+            if n_fail
+            else f"All {len(verdicts)} checks passed."
+        ),
+    ]
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--bench-dir", default="bench_out", help="where BENCH_*.json live"
+    )
+    ap.add_argument(
+        "--baseline-dir", default=BASELINE_DIR, help="committed baselines"
+    )
+    ap.add_argument(
+        "--require",
+        nargs="*",
+        default=None,
+        help="bench names whose BENCH json MUST exist (default: gate "
+        "whatever is present)",
+    )
+    args = ap.parse_args(argv)
+
+    specs = {
+        os.path.splitext(os.path.basename(p))[0]: json.load(open(p))
+        for p in sorted(glob.glob(os.path.join(args.baseline_dir, "*.json")))
+    }
+    verdicts: List[Verdict] = []
+    required = set(args.require or [])
+    for name, spec in specs.items():
+        bench_path = os.path.join(args.bench_dir, f"BENCH_{name}.json")
+        if not os.path.exists(bench_path):
+            if name in required:
+                verdicts.append(
+                    Verdict(name, "-", "document exists", None, False,
+                            f"{bench_path} missing")
+                )
+            continue
+        verdicts.extend(check_doc(name, json.load(open(bench_path)), spec))
+    for name in sorted(required - set(specs)):
+        verdicts.append(
+            Verdict(name, "-", "baseline exists", None, False,
+                    "no baseline spec")
+        )
+
+    md = render_markdown(verdicts)
+    print(md)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(md + "\n")
+    return 1 if any(not v.ok for v in verdicts) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

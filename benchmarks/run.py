@@ -48,6 +48,7 @@ REGISTRY: Tuple[BenchSpec, ...] = (
     BenchSpec("discretization", "DESIGN S7 adaptation", "benchmarks.bench_discretization"),
     BenchSpec("kernel", "frontal Pallas", "benchmarks.bench_kernel"),
     BenchSpec("executor", "PM vs PROPORTIONAL, measured", "benchmarks.bench_executor"),
+    BenchSpec("async", "futures vs wave barrier, straggler-injected A/B", "benchmarks.bench_async", smoke_aware=True),
     BenchSpec("moe_pm", "beyond-paper", "benchmarks.bench_moe_pm"),
     BenchSpec("memory", "memory-bounded: pm vs pm-bounded budget sweep (arXiv:1210.2580)", "benchmarks.bench_memory", smoke_aware=True),
 )

@@ -216,8 +216,19 @@ class Session:
             detail=report,
         )
 
-    def execute(self, *, warmup: bool = True, **executor_kwargs) -> RunReport:
+    def execute(
+        self, *, warmup: bool = True, mode: str = "async", **executor_kwargs
+    ) -> RunReport:
         """Execute the current schedule on the platform's JAX devices.
+
+        ``mode`` selects the runner: ``"async"`` (default) dispatches
+        each front the instant its children's Schur complements land —
+        the per-front futures executor, no wave barrier — while
+        ``"waves"`` keeps the legacy barrier-synchronous runner for A/B
+        comparison.  Both produce bit-identical factors.  Remaining
+        keyword arguments (``delay_fn``, ``memory_cap_bytes``,
+        ``max_batch``, ...) reach
+        :class:`~repro.runtime.executor.PlanExecutor` unchanged.
 
         The problem must carry its sparse context (``analyze`` or
         ``Problem.from_matrix``/``from_symbolic`` with a matrix); a
@@ -246,6 +257,7 @@ class Session:
             problem.symb,
             plan,
             devices=devices,
+            mode=mode,
             **executor_kwargs,
         )
         fact, report = executor.run(problem.matrix, warmup=warmup)
@@ -272,6 +284,13 @@ class Session:
                 # projected from the plan's timeline
                 "measured_peak_bytes": report.measured_peak_bytes,
                 "projected_peak_bytes": report.projected_peak_bytes,
+                # async-mode observable; NaN-free only when fronts record
+                # readiness (the wave path has no per-front ready instant)
+                "mean_ready_latency_s": (
+                    lat
+                    if (lat := report.mean_ready_latency()) is not None
+                    else float("nan")
+                ),
             },
             detail=report,
             artifact=fact,

@@ -88,6 +88,54 @@ def assign_wave_groups(
     return out
 
 
+class BuddyAllocator:
+    """Incremental buddy allocation over a 1-D device ring.
+
+    The wave executor carves all of a wave's groups at once
+    (:func:`assign_wave_groups`); the async futures executor instead
+    allocates a group the moment a front dispatches and returns it the
+    moment the front completes, so freed devices are immediately
+    re-carvable for whatever became ready in the meantime.  Same
+    discipline as the wave carver — requested power-of-two size, aligned
+    offsets first, then any contiguous run, then halving — but stateful:
+    ``alloc`` returns ``None`` when no device is free (the caller waits
+    for a completion instead of time-sharing).
+    """
+
+    def __init__(self, n_devices: int) -> None:
+        self.n_devices = int(n_devices)
+        self._free = np.ones(self.n_devices, dtype=bool)
+
+    @property
+    def n_free(self) -> int:
+        return int(self._free.sum())
+
+    def alloc(self, size: int) -> "DeviceGroup | None":
+        """Carve a group of up to ``size`` devices; halves under pressure.
+
+        Returns ``None`` only when *no* device is free.
+        """
+        size = min(pow2_floor(size), pow2_floor(self.n_devices))
+        while size >= 1:
+            offsets = list(range(0, self.n_devices - size + 1, size))
+            if size > 1:  # aligned first, then sliding
+                offsets += [
+                    o for o in range(self.n_devices - size + 1) if o % size
+                ]
+            for off in offsets:
+                if self._free[off : off + size].all():
+                    self._free[off : off + size] = False
+                    return DeviceGroup(off, size)
+            size //= 2
+        return None
+
+    def free(self, group: DeviceGroup) -> None:
+        assert not self._free[group.offset : group.offset + group.size].any(), (
+            "double free of device group"
+        )
+        self._free[group.offset : group.offset + group.size] = True
+
+
 def groups_footprint(groups: Mapping[int, DeviceGroup]) -> Tuple[int, int]:
     """(devices touched, max concurrent per device) — capacity diagnostics."""
     if not groups:

@@ -7,10 +7,20 @@ run a factorization tree through :class:`OnlineScheduler`, snapshot each
 task's (start, end, mean share) from the emitted schedule, round shares
 to power-of-two device groups, and hand the result to
 :class:`~repro.runtime.executor.PlanExecutor` for a real (interpret-mode
-on CPU) factorization.  Precedence is inherited from the online run —
-a parent's start *is* the completion event of its last child — so the
-executor's wave walk stays valid by construction (waves are grouped with
-the tolerance rule of ``ExecutionPlan.waves``).
+on CPU) factorization.
+
+With the async futures executor (``mode="async"``, the default) this is
+no longer a projection but **the** execution path: the executor runs the
+same dask-style per-front state machine as the online simulation
+(``repro.online.state``) — a front dispatches the instant its children's
+Schur complements land — so the online run's event-driven structure is
+preserved on real devices rather than flattened into barrier waves.  The
+plan's role shrinks to what §4 says it should be: priorities and device
+shares, not a rigid timetable.  ``mode="waves"`` keeps the legacy
+barrier replay for A/B comparison: precedence is inherited from the
+online run — a parent's start *is* the completion event of its last
+child — so the wave walk stays valid by construction (waves are grouped
+with the tolerance rule of ``ExecutionPlan.waves``).
 """
 from __future__ import annotations
 
@@ -108,14 +118,20 @@ def execute_online(
     *,
     policy: str = "pm",
     noise=None,
+    mode: str = "async",
+    warmup: bool = True,
     **executor_kwargs,
 ):
     """Factorize ``a`` through the online scheduler: online run → plan →
-    wave executor.  Returns (Factorization, ExecutionReport, OnlineReport).
+    executor.  Returns (Factorization, ExecutionReport, OnlineReport).
 
-    One shared Problem (built from the symbolic analysis) drives the
-    online admission, the plan projection and the executor, so α and
-    the frontal lengths cannot drift between the three.
+    This is the real execution path: the default ``mode="async"`` runs
+    the per-front futures executor, whose event-driven dispatch mirrors
+    the online run's state machine one-to-one (``mode="waves"`` keeps
+    the legacy barrier replay).  One shared Problem (built from the
+    symbolic analysis) drives the online admission, the plan projection
+    and the executor, so α and the frontal lengths cannot drift between
+    the three.
     """
     from repro.api.problem import Problem  # deferred: api ← online
     from repro.runtime.executor import PlanExecutor  # deferred: jax import
@@ -124,7 +140,9 @@ def execute_online(
     plan, online_report = run_online_plan(
         problem, total_devices, policy=policy, noise=noise
     )
-    fact, exec_report = PlanExecutor(symb, plan, **executor_kwargs).run(a)
+    fact, exec_report = PlanExecutor(symb, plan, mode=mode, **executor_kwargs).run(
+        a, warmup=warmup
+    )
     return fact, exec_report, online_report
 
 

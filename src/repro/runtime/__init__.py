@@ -10,7 +10,12 @@ from .executor import (
     PlanExecutor,
     TraceEvent,
 )
-from .straggler import StragglerDetector, StragglerInjector, rebalance_two_pods
+from .straggler import (
+    FrontDelays,
+    StragglerDetector,
+    StragglerInjector,
+    rebalance_two_pods,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]
 

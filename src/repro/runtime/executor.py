@@ -3,49 +3,67 @@
 This closes the loop the rest of the repo only *projects*: the symbolic
 phase (repro.sparse.symbolic) turns a sparse SPD matrix into an assembly
 tree of malleable tasks, the PM planner (repro.sparse.plan) turns the tree
-into waves of power-of-two device groups with p^α model times — and this
-module actually factorizes the matrix by walking those waves on a JAX mesh:
+into per-front device-group shares with p^α model times — and this module
+actually factorizes the matrix by running those fronts on a JAX mesh.
 
-1. *Wave runner* — ``plan.waves()`` gives maximal same-start task sets.
-   Each wave's fronts are assembled host-side (original entries + the
-   children's Schur complements via extend-add, reusing the symbolic row
-   structures), padded to 128-aligned shape classes, and factored with the
-   Pallas ``front_factor_vmem`` kernel in ONE vmapped dispatch per class —
-   fronts that the planner co-scheduled become one batched kernel launch
-   instead of a Python loop of launches.  Fronts past ``VMEM_FRONT_MAX``
-   take the per-front panel+SYRK pipeline (``ops.partial_cholesky``).
-2. *Device groups* — each front's planned group is carved out of the
-   device list by the buddy allocator (repro.distributed.device_groups);
-   a batch is sharded over the union of its groups' devices (batch axis =
-   "front"), so co-scheduled fronts spread across disjoint sub-meshes,
-   one front per device at a time.  Parallelism is therefore *across*
-   fronts; distributing a single front's factorization over its whole
-   group needs a cross-device factor kernel and is the next step this
-   executor is shaped for (the group carving, trace, and report already
-   speak in group units).  With a single device everything degrades to
-   local dispatch — the CPU interpret-mode validation path, exercised by
-   the tests.
-3. *Trace* — every front produces a :class:`TraceEvent` (front id, planned
-   and carved group sizes, dispatch width, wall-clock start/end, flops).
-   The :class:`ExecutionReport` compares the measured makespan against the
-   plan's p^α projection and re-fits an *empirical* α from the trace
-   (log throughput vs log engaged-devices regression over dispatches, the
-   same regression the paper's §3 runs on measured dense-kernel timings) —
-   the feedback edge that lets the planner's model be recalibrated from
-   real executions.
+Two execution modes share every numeric path (assembly, kernels, extend-add,
+memory accounting) and produce **bit-identical factors**:
+
+1. *Async futures runner* (``mode="async"``, the default) — the dask-style
+   per-front state machine of ``repro.online.state`` made real.  A front is
+   *ready* the instant the last of its children's Schur complements lands;
+   ready fronts of the same padded shape class are opportunistically
+   coalesced into one vmapped Pallas dispatch (up to ``max_batch``), each
+   dispatch's device group is carved incrementally from the currently free
+   devices (:class:`~repro.distributed.device_groups.BuddyAllocator`), and
+   the dispatch is issued on a worker thread immediately — extend-add and
+   later dispatches overlap whatever is still in flight.  No global wave
+   barrier: a straggling front only stalls its own ancestors, never the
+   rest of the mesh (§3–§4's instantaneous re-share, applied to discrete
+   device groups).  Child Schur-complement buffers are freed when their
+   last (only) consumer assembles, which happens as early as possible, so
+   the measured peak tightens relative to the wave path; an optional
+   ``memory_cap_bytes`` defers dispatches that would exceed a byte budget
+   while anything is in flight.
+2. *Wave runner* (``mode="waves"``, the legacy path, kept for A/B
+   benchmarking) — ``plan.waves()`` gives maximal same-start task sets;
+   each wave's fronts are assembled, batched per shape class, and factored
+   before the next wave starts.  One straggler front stalls the entire
+   wave front behind the barrier — exactly the rigidity the malleable
+   model exists to avoid, and what ``benchmarks.bench_async`` measures.
+
+Both modes emit a :class:`TraceEvent` per front (planned and carved group
+sizes, dispatch width, wall-clock start/end, flops, and — new with the
+futures runner — when the front became ready and when it was submitted, so
+ready-latency and dispatch-latency are first-class observables; see
+``ExecutionReport.to_trace`` for the chrome-trace rendering).  The
+:class:`ExecutionReport` compares the measured makespan against the plan's
+p^α projection and re-fits an *empirical* α from the trace (log throughput
+vs log engaged-devices regression over dispatches, the same regression the
+paper's §3 runs on measured dense-kernel timings).
+
+Straggler injection: ``delay_fn`` (front id → seconds; see
+``repro.runtime.straggler.FrontDelays``) stretches a front's dispatch as if
+its device were slow — applied identically in both modes, it is the
+controlled experiment for the barrier-vs-futures comparison.
 
 Timing semantics: each dispatch is timed host-side around
 ``block_until_ready``; fronts sharing a dispatch share its interval, and
 throughput is measured at dispatch granularity (one point per kernel
 launch — see ``ExecutionReport.dispatch_points``) for the α re-fit.
-``warmup=True`` pre-compiles every dispatch signature on dummy identity
-fronts so jit compilation never pollutes the trace.
+``warmup=True`` pre-compiles dispatch signatures on dummy identity fronts
+so jit compilation stays out of the trace (the async mode's opportunistic
+batches can still hit novel sharded signatures; those compile on first
+use).
 """
 from __future__ import annotations
 
+import math
 import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor
+from concurrent.futures import wait as futures_wait
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,8 +71,10 @@ import numpy as np
 import scipy.sparse as sp
 
 from repro.distributed.device_groups import (
+    BuddyAllocator,
     DeviceGroup,
     assign_wave_groups,
+    pow2_floor,
     scale_group,
 )
 from repro.kernels.frontal_cholesky import VMEM_FRONT_MAX
@@ -73,6 +93,15 @@ from repro.sparse.multifrontal import (
 from repro.sparse.plan import ExecutionPlan
 from repro.sparse.symbolic import SymbolicFactorization
 
+DelayFn = Callable[[int], float]  # front id -> injected dispatch delay (s)
+
+MODES = ("async", "waves")
+
+
+def _pow2_ceil(x: int) -> int:
+    """Smallest power of two ≥ max(x, 1)."""
+    return 1 << max(int(x) - 1, 0).bit_length()
+
 
 # ----------------------------------------------------------------------
 @dataclass(frozen=True)
@@ -80,7 +109,7 @@ class TraceEvent:
     """One front's execution record."""
 
     front: int  # supernode id (plan label)
-    wave: int
+    wave: int  # wave index (waves mode) / dispatch sequence (async mode)
     devices: int  # planned device-group size (the plan's model)
     devices_used: int  # group carved on the executing mesh (placement)
     dispatch_devices: int  # distinct devices the front's dispatch engaged
@@ -88,10 +117,24 @@ class TraceEvent:
     t_end: float
     flops: float
     batched: int  # number of fronts sharing this dispatch
+    # futures-mode observables (NaN on the wave path, which has no
+    # per-front ready instant — readiness is the wave barrier itself)
+    t_ready: float = math.nan  # children done → front became dispatchable
+    t_submit: float = math.nan  # handed to a worker / dispatch issued
 
     @property
     def duration(self) -> float:
         return self.t_end - self.t_start
+
+    @property
+    def ready_latency(self) -> float:
+        """Ready → dispatch start: time spent waiting for devices/batching."""
+        return self.t_start - self.t_ready
+
+    @property
+    def dispatch_latency(self) -> float:
+        """Submit → dispatch start: queueing inside the worker pool."""
+        return self.t_start - self.t_submit
 
 
 @dataclass
@@ -111,6 +154,7 @@ class ExecutionReport:
     # plan's resident-bytes timeline projects at the executed dtype
     measured_peak_bytes: float = 0.0
     projected_peak_bytes: float = 0.0
+    mode: str = "waves"  # which runner produced this report
 
     # ------------------------------------------------------------------
     def total_flops(self) -> float:
@@ -180,13 +224,61 @@ class ExecutionReport:
         lr = np.log([r for _, r in pts])
         return float(np.polyfit(lg, lr, 1)[0])
 
+    def mean_ready_latency(self) -> Optional[float]:
+        """Mean ready→start latency over fronts that recorded readiness
+        (async mode); None on a wave-mode trace."""
+        lats = [
+            e.ready_latency
+            for e in self.trace
+            if not math.isnan(e.t_ready)
+        ]
+        if not lats:
+            return None
+        return float(np.mean(lats))
+
+    def to_trace(self, time_scale: float = 1e6) -> List[Dict]:
+        """Chrome trace-event export (load in ui.perfetto.dev).
+
+        One ``X`` slice per front on its dispatch's row; async-mode
+        ready/dispatch latencies land in ``args`` so the stall structure
+        (waiting-for-devices vs running) is visible next to the slices.
+        """
+        out: List[Dict] = []
+        for e in self.trace:
+            if e.t_end <= e.t_start:
+                continue
+            args: Dict = {
+                "devices_planned": e.devices,
+                "devices_used": e.devices_used,
+                "dispatch_devices": e.dispatch_devices,
+                "batched": e.batched,
+                "flops": e.flops,
+            }
+            if not math.isnan(e.t_ready):
+                args["ready_latency_s"] = e.ready_latency
+            if not math.isnan(e.t_submit):
+                args["dispatch_latency_s"] = e.dispatch_latency
+            out.append(
+                {
+                    "name": f"front {e.front}",
+                    "cat": self.mode,
+                    "ph": "X",
+                    "ts": e.t_start * time_scale,
+                    "dur": e.duration * time_scale,
+                    "pid": 0,
+                    "tid": e.wave,
+                    "args": args,
+                }
+            )
+        return out
+
     def summary(self) -> str:
         a_fit = self.fit_alpha()
         proj_s = self.projected_seconds()
         lines = [
             f"executed {len(self.trace)} fronts in {self.n_dispatches} "
             f"dispatches on {self.n_devices} device(s) "
-            f"(interpret={self.interpret})",
+            f"(mode={self.mode}, interpret={self.interpret})",
             f"measured  makespan {self.measured_makespan*1e3:9.2f} ms  "
             f"({self.measured_rate():.3g} flop/s effective)",
             f"projected makespan {proj_s*1e3:9.2f} ms  "
@@ -196,6 +288,9 @@ class ExecutionReport:
             + (f"{a_fit:9.3f}" if a_fit is not None else "      n/a")
             + f"  (planned {self.plan_alpha})",
         ]
+        lat = self.mean_ready_latency()
+        if lat is not None:
+            lines.append(f"ready latency      {lat*1e3:9.2f} ms mean")
         if self.projected_peak_bytes > 0:
             lines.append(
                 f"peak memory        {self.measured_peak_bytes/2**20:9.2f} MiB"
@@ -215,6 +310,20 @@ class _Dispatch:
     supernodes: Tuple[int, ...]  # supernode ids in batch order
 
 
+@dataclass
+class _Inflight:
+    """Bookkeeping for one issued async dispatch."""
+
+    seq: int  # dispatch sequence number (the trace's wave field)
+    supernodes: Tuple[int, ...]
+    key: Tuple[int, int]
+    groups: Dict[int, DeviceGroup]
+    dispatch_devices: int
+    held_bytes: float  # buffers the worker holds until completion
+    t_submit: float
+    large: bool  # per-front partial_cholesky path
+
+
 class PlanExecutor:
     """Executes an :class:`ExecutionPlan` for a symbolic factorization.
 
@@ -229,6 +338,22 @@ class PlanExecutor:
         else float32.
     max_batch : cap on fronts per dispatch (keeps interpret-mode latency
         and padded-batch memory bounded).
+    mode : ``"async"`` (per-front futures, the default) or ``"waves"``
+        (the legacy barrier-synchronous runner, kept for A/B runs).
+    shard_dispatch : shard a batch over its device-group union (default:
+        only on a real TPU backend).  Interpret-mode Pallas cannot be
+        partitioned, so on forged/CPU meshes a sharded dispatch
+        *replicates* the batch per device — cost grows with the union
+        instead of shrinking — hence the default turns it off there for
+        both modes; group carving still governs placement/occupancy.
+    delay_fn : optional front id → seconds straggler injection (see
+        :class:`repro.runtime.straggler.FrontDelays`); stretches the
+        front's dispatch in both modes.
+    memory_cap_bytes : async-mode byte budget — a dispatch that would push
+        resident buffers past the cap is deferred while anything is in
+        flight (and shrunk to a single front before being deferred);
+        progress is always guaranteed when the pipeline is empty.
+    max_workers : async worker threads; defaults to ``max(2, n_devices)``.
     """
 
     def __init__(
@@ -240,7 +365,14 @@ class PlanExecutor:
         interpret: Optional[bool] = None,
         dtype=None,
         max_batch: int = 32,
+        mode: str = "async",
+        shard_dispatch: Optional[bool] = None,
+        delay_fn: Optional[DelayFn] = None,
+        memory_cap_bytes: Optional[float] = None,
+        max_workers: Optional[int] = None,
     ) -> None:
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.symb = symb
         self.plan = plan
         self.devices = list(devices) if devices is not None else jax.devices()
@@ -253,6 +385,15 @@ class PlanExecutor:
             dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
         self.dtype = np.dtype(dtype)
         self.max_batch = int(max_batch)
+        self.mode = mode
+        self.shard_dispatch = (
+            shard_dispatch
+            if shard_dispatch is not None
+            else not self.interpret
+        )
+        self.delay_fn = delay_fn
+        self.memory_cap_bytes = memory_cap_bytes
+        self.max_workers = max_workers
 
         self._children: List[List[int]] = [[] for _ in range(symb.n_supernodes)]
         for s, sn in enumerate(symb.supernodes):
@@ -261,10 +402,11 @@ class PlanExecutor:
 
     # ------------------------------------------------------------------
     def dispatches(self) -> List[_Dispatch]:
-        """The static dispatch schedule (shapes only, no numeric values).
+        """The static wave-mode dispatch schedule (shapes only).
 
         Derived from the plan alone, so it can drive both warmup
-        compilation and the timed run.
+        compilation and the timed wave run.  The async runner forms its
+        dispatches dynamically from the ready set instead.
         """
         out: List[_Dispatch] = []
         for w, wave in enumerate(self.plan.waves()):
@@ -298,16 +440,24 @@ class PlanExecutor:
             out.update(assign_wave_groups(req, ndev))
         return out
 
+    def _delay_for(self, supernodes: Sequence[int]) -> float:
+        """Injected dispatch delay: a batch is as slow as its slowest
+        member (they share the kernel launch)."""
+        if self.delay_fn is None:
+            return 0.0
+        return max((float(self.delay_fn(s)) for s in supernodes), default=0.0)
+
     # ------------------------------------------------------------------
     def _run_batch(
         self, batch: np.ndarray, nbp: int, group_devices: List
     ) -> np.ndarray:
         """Factor a (B, mp, mp) padded stack, sharded over ``group_devices``
-        when more than one is available; returns the factored stack (host)."""
+        when more than one is available and sharding is enabled; returns
+        the factored stack (host)."""
         mp = batch.shape[1]
         assert mp <= VMEM_FRONT_MAX, "large fronts take the per-front path"
         x = jnp.asarray(batch)
-        if len(group_devices) > 1:
+        if len(group_devices) > 1 and self.shard_dispatch:
             from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
             ndev = len(group_devices)
@@ -330,14 +480,19 @@ class PlanExecutor:
         ds: Optional[List[_Dispatch]] = None,
         groups: Optional[Dict[int, DeviceGroup]] = None,
     ) -> None:
-        """Compile every dispatch signature on identity fronts (untimed)."""
+        """Compile every wave dispatch signature on identity fronts
+        (untimed).  In async mode this still covers the single-device and
+        plan-derived shardings; opportunistic batches over other device
+        subsets compile on first use."""
         groups = self._wave_groups() if groups is None else groups
         seen = set()
         for d in self.dispatches() if ds is None else ds:
             mp, nbp = d.key
             if mp > VMEM_FRONT_MAX:
                 continue  # partial_cholesky jits per front shape on first use
-            devs = self._dispatch_devices(d, groups)
+            devs = self._dispatch_devices(d.supernodes, groups)
+            if not self.shard_dispatch:
+                devs = devs[:1]
             b = len(d.supernodes)
             if b % max(len(devs), 1):
                 b += (-b) % len(devs)
@@ -350,14 +505,37 @@ class PlanExecutor:
             eye = np.broadcast_to(np.eye(mp, dtype=self.dtype), (len(d.supernodes), mp, mp)).copy()
             self._run_batch(eye, nbp, devs)
 
+    def _warmup_async(self) -> None:
+        """Compile the async runner's dispatch signatures (untimed).
+
+        Async batches are truncated to power-of-two sizes, so per shape
+        class only ``log2`` batch signatures exist; with sharding off
+        (the interpret-mode default) the device identity drops out of
+        the jit key and this coverage is *exact* — no compile ever lands
+        inside the timed region."""
+        counts: Dict[Tuple[int, int], int] = {}
+        for sn in self.symb.supernodes:
+            key = padded_shape(sn.m, sn.nb)
+            if key[0] <= VMEM_FRONT_MAX:
+                counts[key] = counts.get(key, 0) + 1
+        for (mp, nbp), c in sorted(counts.items()):
+            b = 1
+            cap = _pow2_ceil(min(c, self.max_batch))
+            while b <= cap:
+                eye = np.broadcast_to(
+                    np.eye(mp, dtype=self.dtype), (b, mp, mp)
+                ).copy()
+                self._run_batch(eye, nbp, self.devices[:1])
+                b *= 2
+
     def _dispatch_devices(
-        self, d: _Dispatch, groups: Dict[int, DeviceGroup]
+        self, supernodes: Sequence[int], groups: Dict[int, DeviceGroup]
     ) -> List:
         """Union of the batch fronts' device groups, in mesh order."""
         idx = sorted(
             {
                 i
-                for s in d.supernodes
+                for s in supernodes
                 if s in groups
                 for i in range(
                     groups[s].offset, groups[s].offset + groups[s].size
@@ -366,12 +544,89 @@ class PlanExecutor:
         )
         return [self.devices[i] for i in idx] or self.devices[:1]
 
+    def _projected_peak(self) -> float:
+        """The plan's resident-bytes timeline peak at this dtype."""
+        from repro.sparse.plan import plan_memory_timeline
+
+        tree = self.symb.task_tree()
+        fp = self.symb.footprints(itemsize=self.dtype.itemsize).padded(tree.n)
+        return float(plan_memory_timeline(self.plan, tree, fp).peak)
+
     # ------------------------------------------------------------------
     def run(
         self, a: sp.csr_matrix, warmup: bool = True
     ) -> Tuple[Factorization, ExecutionReport]:
         """Factorize ``a`` by executing the plan; returns the factorization
-        and the measured-vs-projected report."""
+        and the measured-vs-projected report.  Dispatches to the async
+        futures runner or the legacy wave runner per ``self.mode``."""
+        if self.mode == "waves":
+            return self._run_waves(a, warmup)
+        return self._run_async(a, warmup)
+
+    # -- shared numeric helpers ----------------------------------------
+    def _assemble(
+        self,
+        s: int,
+        acsc: sp.csc_matrix,
+        panels: List[Optional[np.ndarray]],
+        updates: Dict[int, Tuple[np.ndarray, np.ndarray]],
+    ) -> Tuple[np.ndarray, float]:
+        """Assemble front ``s`` (original entries + children extend-add),
+        popping — i.e. freeing — the children's Schur buffers.  Returns
+        (front, consumed CB bytes).  Children are folded in tree order
+        regardless of completion order, so the float summation order (and
+        therefore the factor bits) is identical across modes."""
+        sn = self.symb.supernodes[s]
+        kids = self._children[s]
+        assert all(panels[c] is not None for c in kids), (
+            "dispatch order violates tree precedence"
+        )
+        consumed = 0.0
+        kid_updates = []
+        for c in kids:
+            rows_c, upd_c = updates.pop(c)
+            consumed += float(rows_c.nbytes + upd_c.nbytes)
+            kid_updates.append((rows_c, upd_c))
+        f = assemble_front_np(acsc, sn, kid_updates)
+        return f.astype(self.dtype, copy=False), consumed
+
+    def _store(self, s, panel, schur, panels, updates) -> None:
+        """Record a factored front: keep the panel, queue the Schur
+        complement for the parent's extend-add."""
+        sn = self.symb.supernodes[s]
+        panels[s] = panel
+        self._mem_panels += float(panel.nbytes)
+        if sn.m > sn.nb:
+            updates[s] = (sn.rows[sn.nb :], schur)
+            self._mem_updates += float(sn.rows[sn.nb :].nbytes + schur.nbytes)
+
+    def _make_report(
+        self,
+        trace: List[TraceEvent],
+        n_disp: int,
+        mem_peak: float,
+        projected_peak: float,
+        mode: str,
+    ) -> ExecutionReport:
+        measured = max((e.t_end for e in trace), default=0.0)
+        return ExecutionReport(
+            plan_makespan=self.plan.makespan,
+            plan_alpha=self.plan.alpha,
+            plan_devices=self.plan.total_devices,
+            measured_makespan=measured,
+            trace=trace,
+            n_dispatches=n_disp,
+            n_devices=len(self.devices),
+            interpret=self.interpret,
+            measured_peak_bytes=float(mem_peak),
+            projected_peak_bytes=float(projected_peak),
+            mode=mode,
+        )
+
+    # -- wave runner (legacy, barrier-synchronous) ---------------------
+    def _run_waves(
+        self, a: sp.csr_matrix, warmup: bool = True
+    ) -> Tuple[Factorization, ExecutionReport]:
         symb = self.symb
         acsc = lower_csc(a)
         groups = self._wave_groups()
@@ -380,12 +635,7 @@ class PlanExecutor:
         if warmup:
             self.warmup(ds, groups)
 
-        # projected peak: the plan's resident-bytes timeline at this dtype
-        from repro.sparse.plan import plan_memory_timeline
-
-        tree = symb.task_tree()
-        fp = symb.footprints(itemsize=self.dtype.itemsize).padded(tree.n)
-        projected_peak = plan_memory_timeline(self.plan, tree, fp).peak
+        projected_peak = self._projected_peak()
 
         updates: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         panels: List[Optional[np.ndarray]] = [None] * symb.n_supernodes
@@ -403,18 +653,9 @@ class PlanExecutor:
             fronts = []
             consumed = 0.0
             for s in d.supernodes:
-                sn = symb.supernodes[s]
-                kids = self._children[s]
-                assert all(panels[c] is not None for c in kids), (
-                    "plan wave order violates tree precedence"
-                )
-                kid_updates = []
-                for c in kids:
-                    rows_c, upd_c = updates.pop(c)
-                    consumed += float(rows_c.nbytes + upd_c.nbytes)
-                    kid_updates.append((rows_c, upd_c))
-                f = assemble_front_np(acsc, sn, kid_updates)
-                fronts.append(f.astype(self.dtype, copy=False))
+                f, c = self._assemble(s, acsc, panels, updates)
+                consumed += c
+                fronts.append(f)
             fronts_bytes = float(sum(f.nbytes for f in fronts))
             # extend-add transient: consumed CBs (still counted in
             # _mem_updates) coexist with the assembled fronts
@@ -424,8 +665,13 @@ class PlanExecutor:
             self._mem_updates -= consumed
 
             mp, nbp = d.key
-            disp_devs = self._dispatch_devices(d, groups)
+            disp_devs = self._dispatch_devices(d.supernodes, groups)
+            if not self.shard_dispatch:
+                disp_devs = disp_devs[:1]
+            delay = self._delay_for(d.supernodes)
             t0 = time.perf_counter() - t_run0
+            if delay > 0:
+                time.sleep(delay)  # the straggling device, behind the barrier
             if mp > VMEM_FRONT_MAX:
                 disp_devs = disp_devs[:1]  # per-front path runs locally
                 # large fronts: per-front panel+SYRK pipeline
@@ -481,30 +727,301 @@ class PlanExecutor:
                 )
 
         assert all(p is not None for p in panels), "plan missed supernodes"
-        measured = max((e.t_end for e in trace), default=0.0)
-        report = ExecutionReport(
-            plan_makespan=self.plan.makespan,
-            plan_alpha=self.plan.alpha,
-            plan_devices=self.plan.total_devices,
-            measured_makespan=measured,
-            trace=trace,
-            n_dispatches=n_disp,
-            n_devices=len(self.devices),
-            interpret=self.interpret,
-            measured_peak_bytes=float(mem_peak),
-            projected_peak_bytes=float(projected_peak),
+        report = self._make_report(
+            trace, n_disp, mem_peak, projected_peak, "waves"
         )
         return Factorization(symb=symb, panels=panels), report  # type: ignore[arg-type]
 
-    def _store(self, s, panel, schur, panels, updates) -> None:
-        """Record a factored front: keep the panel, queue the Schur
-        complement for the parent's extend-add."""
-        sn = self.symb.supernodes[s]
-        panels[s] = panel
-        self._mem_panels += float(panel.nbytes)
-        if sn.m > sn.nb:
-            updates[s] = (sn.rows[sn.nb :], schur)
-            self._mem_updates += float(sn.rows[sn.nb :].nbytes + schur.nbytes)
+    # -- async futures runner (per-front state machine) ----------------
+    def _run_async(
+        self, a: sp.csr_matrix, warmup: bool = True
+    ) -> Tuple[Factorization, ExecutionReport]:
+        """Event-driven execution: fronts dispatch the instant their
+        children's Schur complements land; no wave barrier.
+
+        The main thread owns all bookkeeping (readiness, assembly,
+        extend-add, memory accounting, trace); worker threads only run
+        the kernel dispatch, so no lock is needed beyond the futures.
+        """
+        symb = self.symb
+        acsc = lower_csc(a)
+        ndev = len(self.devices)
+        by_task = {t.label: t for t in self.plan.tasks if t.label >= 0}
+        if warmup:
+            self._warmup_async()
+            if self.shard_dispatch:
+                self.warmup()  # plan-derived sharded signatures too
+        projected_peak = self._projected_peak()
+
+        n = symb.n_supernodes
+        itemsize = self.dtype.itemsize
+        # plan-derived dispatch priority (earliest planned start first) and
+        # desired group size, rescaled to the executing mesh
+        prio = {
+            s: (by_task[s].start if s in by_task else 0.0, s) for s in range(n)
+        }
+        want = {
+            s: (
+                scale_group(
+                    by_task[s].devices, self.plan.total_devices, ndev
+                )
+                if s in by_task and by_task[s].devices > 0
+                else 1
+            )
+            for s in range(n)
+        }
+
+        n_unfinished = np.array(
+            [len(self._children[s]) for s in range(n)], dtype=np.int64
+        )
+        updates: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        panels: List[Optional[np.ndarray]] = [None] * n
+        trace: List[TraceEvent] = []
+        alloc = BuddyAllocator(ndev)
+        in_flight: Dict = {}  # Future -> _Inflight
+        t_ready: Dict[int, float] = {}
+        ready: List[int] = []
+        self._mem_panels = 0.0
+        self._mem_updates = 0.0
+        mem_inflight = 0.0
+        mem_peak = 0.0
+        n_done = 0
+        n_disp = 0
+        seq = 0
+
+        t_run0 = time.perf_counter()
+
+        def now() -> float:
+            return time.perf_counter() - t_run0
+
+        for s in range(n):
+            if n_unfinished[s] == 0:
+                t_ready[s] = 0.0
+                ready.append(s)
+
+        def worker_small(batch, nbp, devs, delay):
+            t0 = now()
+            if delay > 0:
+                time.sleep(delay)  # the straggling device — only this
+                # dispatch's ancestors wait for it
+            out = self._run_batch(batch, nbp, devs)
+            return {"out": out, "t0": t0, "t1": now()}
+
+        def worker_large(items, delay):
+            # items: [(supernode, front)] — per-front panel+SYRK pipeline
+            t0 = now()
+            if delay > 0:
+                time.sleep(delay)
+            outs = []
+            for s, f in items:
+                sn = symb.supernodes[s]
+                panel, schur = partial_cholesky(
+                    jnp.asarray(f), sn.nb, interpret=self.interpret
+                )
+                outs.append(
+                    (np.asarray(jax.block_until_ready(panel)), np.asarray(schur))
+                )
+            return {"outs": outs, "t0": t0, "t1": now()}
+
+        def launch_ready(pool) -> int:
+            """Issue as many dispatches as devices/memory admit; returns
+            how many were launched."""
+            nonlocal mem_inflight, mem_peak, n_disp, seq
+            launched = 0
+            while ready:
+                if alloc.n_free == 0:
+                    break
+                classes: Dict[Tuple[int, int], List[int]] = {}
+                for s in ready:
+                    sn = symb.supernodes[s]
+                    classes.setdefault(padded_shape(sn.m, sn.nb), []).append(s)
+                key = min(
+                    classes, key=lambda k: min(prio[s] for s in classes[k])
+                )
+                mp, nbp = key
+                members = sorted(classes[key], key=lambda s: prio[s])
+                if mp > VMEM_FRONT_MAX:
+                    members = members[:1]
+                else:
+                    # power-of-two batch sizes only: bounds the jit
+                    # signature space to what _warmup_async pre-compiled
+                    # (the remainder stays ready for the next dispatch)
+                    members = members[
+                        : pow2_floor(min(len(members), self.max_batch))
+                    ]
+
+                def dispatch_bytes(ms) -> float:
+                    fb = sum(
+                        symb.supernodes[s].m ** 2 * itemsize for s in ms
+                    )
+                    bb = 0 if mp > VMEM_FRONT_MAX else len(ms) * mp * mp * itemsize
+                    return float(fb + bb)
+
+                if self.memory_cap_bytes is not None:
+                    resident = (
+                        self._mem_panels + self._mem_updates + mem_inflight
+                    )
+                    while (
+                        len(members) > 1
+                        and resident + dispatch_bytes(members)
+                        > self.memory_cap_bytes
+                    ):
+                        members = members[:-1]  # shed the lowest priority
+                    if resident + dispatch_bytes(members) > self.memory_cap_bytes:
+                        if in_flight or launched:
+                            break  # wait for buffers to free
+                        # pipeline empty: dispatch anyway (progress beats
+                        # the cap, same as the wave path's single dispatch)
+
+                groups: Dict[int, DeviceGroup] = {}
+                for s in members:
+                    g = alloc.alloc(want[s])
+                    if g is None:
+                        break
+                    groups[s] = g
+                if not groups:
+                    break  # no free device — wait for a completion
+                # every chosen member joins the dispatch: the batch is one
+                # kernel launch sharded over the carved groups' union, so
+                # fronts beyond the free capacity time-share it (same
+                # discipline as the wave carver's oversubscription rule)
+                for s in members:
+                    ready.remove(s)
+
+                t_sub = now()
+                fronts = []
+                consumed = 0.0
+                for s in members:
+                    f, c = self._assemble(s, acsc, panels, updates)
+                    consumed += c
+                    fronts.append(f)
+                fronts_bytes = float(sum(f.nbytes for f in fronts))
+                # extend-add transient: consumed CBs coexist with the
+                # newly assembled fronts
+                mem_peak = max(
+                    mem_peak,
+                    self._mem_panels
+                    + self._mem_updates
+                    + mem_inflight
+                    + fronts_bytes,
+                )
+                self._mem_updates -= consumed
+                delay = self._delay_for(members)
+
+                if mp > VMEM_FRONT_MAX:
+                    held = fronts_bytes
+                    disp_dev = 1
+                    fut = pool.submit(
+                        worker_large, list(zip(members, fronts)), delay
+                    )
+                else:
+                    batch = np.stack(
+                        [
+                            pad_front_np(f, symb.supernodes[s].nb, self.dtype)
+                            for s, f in zip(members, fronts)
+                        ]
+                    )
+                    mem_peak = max(
+                        mem_peak,
+                        self._mem_panels
+                        + self._mem_updates
+                        + mem_inflight
+                        + fronts_bytes
+                        + float(batch.nbytes),
+                    )
+                    held = float(batch.nbytes)
+                    devs = self._dispatch_devices(members, groups)
+                    if not self.shard_dispatch:
+                        devs = devs[:1]
+                    disp_dev = len(devs)
+                    fut = pool.submit(worker_small, batch, nbp, devs, delay)
+                del fronts
+                mem_inflight += held
+                in_flight[fut] = _Inflight(
+                    seq=seq,
+                    supernodes=tuple(members),
+                    key=key,
+                    groups=groups,
+                    dispatch_devices=disp_dev,
+                    held_bytes=held,
+                    t_submit=t_sub,
+                    large=mp > VMEM_FRONT_MAX,
+                )
+                seq += 1
+                n_disp += 1
+                launched += 1
+            return launched
+
+        def complete(fut) -> None:
+            nonlocal mem_inflight, mem_peak, n_done
+            info = in_flight.pop(fut)
+            res = fut.result()
+            t0, t1 = res["t0"], res["t1"]
+            if info.large:
+                for s, (panel, schur) in zip(info.supernodes, res["outs"]):
+                    self._store(s, panel, schur, panels, updates)
+            else:
+                for s, o in zip(info.supernodes, res["out"]):
+                    sn = symb.supernodes[s]
+                    panel, schur = extract_panel_schur(o, sn.m, sn.nb)
+                    self._store(s, panel, schur, panels, updates)
+            mem_inflight -= info.held_bytes
+            mem_peak = max(
+                mem_peak, self._mem_panels + self._mem_updates + mem_inflight
+            )
+            for s in info.supernodes:
+                g = info.groups.get(s)
+                if g is not None:
+                    alloc.free(g)
+                sn = symb.supernodes[s]
+                trace.append(
+                    TraceEvent(
+                        front=s,
+                        wave=info.seq,
+                        devices=by_task[s].devices if s in by_task else 1,
+                        devices_used=g.size if g else 1,
+                        dispatch_devices=info.dispatch_devices,
+                        t_start=t0,
+                        t_end=t1,
+                        flops=sn.flops,
+                        batched=len(info.supernodes),
+                        t_ready=t_ready[s],
+                        t_submit=info.t_submit,
+                    )
+                )
+                # the completion event: the parent becomes ready the
+                # instant its last child's Schur complement lands
+                p = symb.supernodes[s].parent
+                if p >= 0:
+                    n_unfinished[p] -= 1
+                    if n_unfinished[p] == 0:
+                        t_ready[p] = t1
+                        ready.append(p)
+            n_done += len(info.supernodes)
+
+        workers = self.max_workers or max(2, ndev)
+        pool = ThreadPoolExecutor(max_workers=workers)
+        try:
+            while n_done < n:
+                launched = launch_ready(pool)
+                if in_flight:
+                    done, _ = futures_wait(
+                        set(in_flight), return_when=FIRST_COMPLETED
+                    )
+                    for fut in done:
+                        complete(fut)
+                elif not launched:
+                    raise RuntimeError(
+                        "async executor stalled with ready fronts"
+                    )
+        finally:
+            pool.shutdown(wait=True)
+
+        assert all(p is not None for p in panels), "plan missed supernodes"
+        report = self._make_report(
+            trace, n_disp, mem_peak, projected_peak, "async"
+        )
+        return Factorization(symb=symb, panels=panels), report  # type: ignore[arg-type]
 
 
 def execute_plan(

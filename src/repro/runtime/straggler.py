@@ -13,7 +13,7 @@ the malleable tasks accordingly.  This is exactly the paper's perspective
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
@@ -91,6 +91,48 @@ class StragglerInjector:
         for at, payload in evs:
             scheduler.inject(at, payload)
         return len(evs)
+
+
+@dataclass(frozen=True)
+class FrontDelays:
+    """Deterministic per-front dispatch delays — the executor-side
+    straggler injection.
+
+    The detector above observes stragglers; this is how experiments
+    *create* them: ``delays[front] = seconds`` stretches that front's
+    kernel dispatch as if its device were slow, in both executor modes
+    (the ``delay_fn`` contract of
+    :class:`repro.runtime.executor.PlanExecutor`).  Under the wave
+    runner the whole wave stalls behind the barrier; under the async
+    futures runner only the front's ancestors wait — which is exactly
+    the A/B ``benchmarks.bench_async`` measures.
+    """
+
+    delays: Mapping[int, float]
+
+    def __call__(self, front: int) -> float:
+        return float(self.delays.get(int(front), 0.0))
+
+    def total(self) -> float:
+        return float(sum(self.delays.values()))
+
+    @classmethod
+    def random(
+        cls,
+        fronts: Sequence[int],
+        n_stragglers: int,
+        delay: float,
+        seed: int = 0,
+    ) -> "FrontDelays":
+        """Pick ``n_stragglers`` distinct fronts uniformly and delay each
+        by ``delay`` seconds (seeded, so A/B runs hit the same fronts)."""
+        rng = np.random.default_rng(seed)
+        picks = rng.choice(
+            np.asarray(list(fronts)),
+            size=min(n_stragglers, len(fronts)),
+            replace=False,
+        )
+        return cls(delays={int(s): float(delay) for s in picks})
 
 
 def rebalance_two_pods(

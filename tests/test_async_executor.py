@@ -1,0 +1,299 @@
+"""Async futures executor: event-driven dispatch vs the wave barrier.
+
+The contract under test (see ``repro.runtime.executor``): the async
+runner may complete fronts in any order the tree admits — stragglers
+stall only their ancestors — yet the factors stay bit-identical to the
+wave path, precedence is never violated, and freed-buffer accounting
+keeps the measured peak within the wave path's when capped.
+"""
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.distributed.device_groups import BuddyAllocator
+from repro.runtime.executor import MODES, PlanExecutor
+from repro.runtime.straggler import FrontDelays
+from repro.sparse import (
+    analyze,
+    grid_laplacian_2d,
+    make_plan,
+    nested_dissection_2d,
+    permute_symmetric,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    a = grid_laplacian_2d(9)
+    ap = permute_symmetric(a, nested_dissection_2d(9))
+    symb = analyze(ap, relax=1)
+    plan = make_plan(symb.task_tree(), 8, alpha=0.9)
+    return ap, symb, plan
+
+
+def _run(problem, mode, **kw):
+    ap, symb, plan = problem
+    return PlanExecutor(symb, plan, mode=mode, **kw).run(ap, warmup=False)
+
+
+# ----------------------------------------------------------------------
+# BuddyAllocator: incremental power-of-two group carving
+# ----------------------------------------------------------------------
+def test_buddy_alloc_pow2_aligned():
+    alloc = BuddyAllocator(8)
+    g4 = alloc.alloc(4)
+    g2 = alloc.alloc(2)
+    g1 = alloc.alloc(3)  # 3 floors to 2, halves to fit the free single
+    for g in (g4, g2, g1):
+        assert g is not None
+        assert g.size & (g.size - 1) == 0
+        assert g.offset % g.size == 0
+    assert g4.size == 4 and g2.size == 2
+    assert alloc.n_free == 8 - g4.size - g2.size - g1.size
+
+
+def test_buddy_exhaustion_and_free():
+    alloc = BuddyAllocator(4)
+    gs = [alloc.alloc(1) for _ in range(4)]
+    assert all(g is not None for g in gs)
+    assert alloc.n_free == 0
+    assert alloc.alloc(1) is None  # full: caller must wait for a free
+    alloc.free(gs[1])
+    assert alloc.n_free == 1
+    g = alloc.alloc(4)  # only one device free: degrades, never None
+    assert g is not None and g.size == 1 and g.offset == gs[1].offset
+
+
+def test_buddy_double_free_asserts():
+    alloc = BuddyAllocator(2)
+    g = alloc.alloc(2)
+    alloc.free(g)
+    with pytest.raises(AssertionError):
+        alloc.free(g)
+
+
+# ----------------------------------------------------------------------
+# FrontDelays: the deterministic straggler injection
+# ----------------------------------------------------------------------
+def test_front_delays_random_seeded():
+    d1 = FrontDelays.random(range(40), 5, 0.25, seed=3)
+    d2 = FrontDelays.random(range(40), 5, 0.25, seed=3)
+    assert d1.delays == d2.delays  # same seed, same stragglers
+    assert len(d1.delays) == 5
+    assert d1.total() == pytest.approx(1.25)
+    hit = next(iter(d1.delays))
+    assert d1(hit) == 0.25
+    miss = next(s for s in range(40) if s not in d1.delays)
+    assert d1(miss) == 0.0
+
+
+def test_bad_mode_rejected(problem):
+    ap, symb, plan = problem
+    with pytest.raises(ValueError):
+        PlanExecutor(symb, plan, mode="eager")
+    assert MODES == ("async", "waves")
+
+
+# ----------------------------------------------------------------------
+# Bit-identical factors + per-front observables
+# ----------------------------------------------------------------------
+def test_async_bit_identical_to_waves(problem):
+    ap, symb, plan = problem
+    fw, rw = _run(problem, "waves")
+    fa, ra = _run(problem, "async")
+    for pw, pa in zip(fw.panels, fa.panels):
+        np.testing.assert_array_equal(pw, pa)
+    dense = ap.toarray()
+    l = fa.to_dense_l()
+    assert np.abs(l @ l.T - dense).max() / np.abs(dense).max() < 1e-5
+    assert rw.mode == "waves" and ra.mode == "async"
+
+    # async records per-front readiness; the wave path has no such instant
+    assert all(not math.isnan(e.t_ready) for e in ra.trace)
+    assert all(not math.isnan(e.t_submit) for e in ra.trace)
+    assert all(math.isnan(e.t_ready) for e in rw.trace)
+    assert ra.mean_ready_latency() is not None
+    assert rw.mean_ready_latency() is None
+    # submit happens at/after ready, dispatch at/after submit
+    for e in ra.trace:
+        assert e.t_submit >= e.t_ready - 1e-9
+        assert e.dispatch_latency >= -1e-9
+        assert e.ready_latency >= -1e-9
+
+
+def test_async_tree_precedence(problem):
+    ap, symb, plan = problem
+    _, ra = _run(problem, "async")
+    ev = {e.front: e for e in ra.trace}
+    assert sorted(ev) == list(range(symb.n_supernodes))
+    for s, sn in enumerate(symb.supernodes):
+        if sn.parent >= 0:
+            # a parent's dispatch starts only after the child landed
+            assert ev[sn.parent].t_start >= ev[s].t_end - 1e-9
+            # and its recorded ready instant is the last child completion
+            assert ev[sn.parent].t_ready >= ev[s].t_end - 1e-9
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="overtaking needs a second device group (one device means the "
+    "straggler holds the whole mesh); CI's forged 8-device job runs this",
+)
+def test_async_out_of_order_completion(problem):
+    """A straggling leaf must not stall unrelated fronts (no barrier)."""
+    ap, symb, plan = problem
+    # delay the first leaf; everything outside its ancestor chain should
+    # overtake it
+    leaf = next(
+        s for s in range(symb.n_supernodes) if not any(
+            symb.supernodes[c].parent == s for c in range(symb.n_supernodes)
+        )
+    )
+    delays = FrontDelays(delays={leaf: 0.5})
+    # max_batch=1 keeps the straggler out of its siblings' dispatches
+    # (coalescing would make the whole shape class as slow as its slowest
+    # member, which is the point of batching — but not of this test)
+    fw, rw = _run(problem, "waves", delay_fn=delays, max_batch=1)
+    fa, ra = _run(problem, "async", delay_fn=delays, max_batch=1)
+    for pw, pa in zip(fw.panels, fa.panels):
+        np.testing.assert_array_equal(pw, pa)
+
+    ancestors = {leaf}
+    p = symb.supernodes[leaf].parent
+    while p >= 0:
+        ancestors.add(p)
+        p = symb.supernodes[p].parent
+    ev = {e.front: e for e in ra.trace}
+    overtakers = [
+        s
+        for s in range(symb.n_supernodes)
+        if s not in ancestors and ev[s].t_end < ev[leaf].t_end
+    ]
+    assert overtakers, "no front overtook the injected straggler"
+    # the barrier pays the stall on the whole mesh; the futures runner
+    # hides it behind independent work
+    assert ra.measured_makespan < rw.measured_makespan
+
+
+def test_async_peak_capped_by_wave_peak(problem):
+    """Freed-buffer accounting: capped async stays within the wave peak."""
+    _, rw = _run(problem, "waves")
+    _, ra = _run(
+        problem, "async", memory_cap_bytes=rw.measured_peak_bytes
+    )
+    assert ra.measured_peak_bytes <= rw.measured_peak_bytes
+    assert ra.measured_peak_bytes > 0
+
+
+def test_async_chrome_trace_export(problem):
+    _, ra = _run(problem, "async")
+    _, rw = _run(problem, "waves")
+    evs = ra.to_trace()
+    assert evs and all(e["ph"] == "X" for e in evs)
+    assert all(e["dur"] > 0 for e in evs)
+    assert all("ready_latency_s" in e["args"] for e in evs)
+    assert all("dispatch_latency_s" in e["args"] for e in evs)
+    assert {e["cat"] for e in evs} == {"async"}
+    # the wave trace has no readiness observables to export
+    wevs = rw.to_trace()
+    assert all("ready_latency_s" not in e["args"] for e in wevs)
+
+
+# ----------------------------------------------------------------------
+# The public surfaces: Session.execute(mode=) and execute_online
+# ----------------------------------------------------------------------
+def test_session_execute_mode():
+    from repro.api import DeviceMesh, Problem, Session
+
+    g = 9
+    a = grid_laplacian_2d(g)
+    prob = Problem.from_matrix(
+        a, 0.9, ordering=nested_dissection_2d(g), relax=1
+    )
+    sess = Session(DeviceMesh(plan_devices=8)).load(prob).plan("greedy")
+    rep_w = sess.execute(warmup=False, mode="waves")
+    rep_a = sess.execute(warmup=False)  # async is the default
+    assert rep_w.detail.mode == "waves"
+    assert rep_a.detail.mode == "async"
+    np.testing.assert_array_equal(
+        rep_w.artifact.to_dense_l(), rep_a.artifact.to_dense_l()
+    )
+    assert math.isnan(rep_w.metrics["mean_ready_latency_s"])
+    assert rep_a.metrics["mean_ready_latency_s"] >= 0.0
+
+
+def test_execute_online_async():
+    from repro.online.replay import execute_online
+
+    g = 9
+    a = grid_laplacian_2d(g)
+    ap = permute_symmetric(a, nested_dissection_2d(g))
+    symb = analyze(ap, relax=1)
+    fact, exec_rep, online_rep = execute_online(
+        ap, symb, 8, 0.9, warmup=False
+    )
+    assert exec_rep.mode == "async"
+    dense = ap.toarray()
+    l = fact.to_dense_l()
+    assert np.abs(l @ l.T - dense).max() / np.abs(dense).max() < 1e-5
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+def test_async_beats_waves_forged_mesh():
+    """The tentpole A/B on a forged 8-device mesh (subprocess owns the
+    XLA flag): with injected stragglers the futures runner must beat the
+    barrier, bit-identically, within the wave path's memory peak."""
+    code = """
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+from repro.runtime.executor import PlanExecutor
+from repro.runtime.straggler import FrontDelays
+from repro.sparse import analyze, grid_laplacian_2d, make_plan, \
+    nested_dissection_2d, permute_symmetric
+
+assert jax.device_count() == 8
+a = grid_laplacian_2d(11)
+ap = permute_symmetric(a, nested_dissection_2d(11))
+symb = analyze(ap, relax=1)
+plan = make_plan(symb.task_tree(), 8, alpha=0.9)
+delays = FrontDelays.random(range(symb.n_supernodes), 4, 0.2, seed=1)
+fw, rw = PlanExecutor(symb, plan, mode="waves", delay_fn=delays).run(ap)
+fa, ra = PlanExecutor(
+    symb, plan, mode="async", delay_fn=delays,
+    memory_cap_bytes=rw.measured_peak_bytes,
+).run(ap)
+for pw, pa in zip(fw.panels, fa.panels):
+    np.testing.assert_array_equal(pw, pa)
+assert ra.measured_peak_bytes <= rw.measured_peak_bytes
+speedup = rw.measured_makespan / ra.measured_makespan
+assert speedup > 1.0, (rw.measured_makespan, ra.measured_makespan)
+print("ASYNC_AB_OK", round(speedup, 3))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ASYNC_AB_OK" in out.stdout
