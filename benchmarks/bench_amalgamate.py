@@ -1,0 +1,144 @@
+"""Amalgamation Pareto sweep: threshold → (makespan, peak memory).
+
+The many-small-fronts regime the optimizer targets: ``relax=0`` symbolic
+analysis leaves every fundamental supernode its own front, so the
+unoptimized plan drowns in per-dispatch overhead (modelled here as a
+constant ``delay_s`` per kernel launch, injected identically into both
+legs through ``delay_fn`` — a fused group pays it **once**, which is the
+entire amalgamation bet).  The sweep runs
+``Session.optimize(max_front=t, memory_budget=B)`` for each threshold
+``t`` against the same matrix and compares measured async makespans with
+the unoptimized greedy baseline; ``B`` is 1.25× the baseline schedule's
+certified peak, so the optimizer must trade within a real budget, and
+every leg's factors must land bit-identical to the baseline's.
+
+Rows: one per leg, ``us_per_call`` = measured async makespan.  Summary:
+the CI-gated verdict — ``speedup`` (baseline / best amalgamated),
+``bit_identical``, ``peak_ok`` (every leg's certified sequential peak
+within ``B``), ``ndev``, plus the full ``pareto`` list
+(threshold → makespan / certified peak / task + dispatch counts).
+
+Forge a mesh as CI's gate job does:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8
+python -m benchmarks.bench_amalgamate``
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.api import DeviceMesh, Problem, Session
+from repro.core.memory import sequential_peak
+from repro.sparse import grid_laplacian_2d, nested_dissection_2d
+
+SEED = 0
+CONFIG = {
+    "alpha": 0.9,
+    "grid": 11,
+    "grid_smoke": 9,
+    "relax": 0,
+    "delay_s": 0.05,  # constant per-dispatch overhead, both legs
+    "thresholds": [0, 32, 64, 128],
+    "thresholds_smoke": [0, 64],
+    "budget_slack": 1.25,
+}
+
+
+def _bit_identical(fa, fb) -> bool:
+    return all(np.array_equal(p, q) for p, q in zip(fa.panels, fb.panels))
+
+
+def run(smoke: bool = False) -> Tuple[List[Dict], Dict]:
+    grid = CONFIG["grid_smoke"] if smoke else CONFIG["grid"]
+    thresholds = (
+        CONFIG["thresholds_smoke"] if smoke else CONFIG["thresholds"]
+    )
+    ndev = len(jax.devices())
+    a = grid_laplacian_2d(grid)
+    prob = Problem.from_matrix(
+        a,
+        CONFIG["alpha"],
+        ordering=nested_dissection_2d(grid),
+        relax=CONFIG["relax"],
+        name=f"grid{grid}r0",
+    )
+
+    def delay(_s: int) -> float:
+        return CONFIG["delay_s"]
+
+    rows: List[Dict] = []
+
+    def record(tag: str, rep, n_tasks: int, cert_peak: float) -> None:
+        rows.append(
+            {
+                "name": tag,
+                "us_per_call": round(rep.makespan * 1e6, 1),
+                "derived": (
+                    f"tasks={n_tasks}"
+                    f" dispatches={rep.metrics['n_dispatches']:.0f}"
+                    f" cert_peak_bytes={cert_peak:.0f}"
+                    f" measured_peak_bytes={rep.metrics['measured_peak_bytes']:.0f}"
+                ),
+            }
+        )
+
+    # unoptimized baseline (async, same injected dispatch overhead)
+    base = Session(DeviceMesh()).load(prob).plan("greedy")
+    base_peak = base.schedule.peak_memory()
+    rep0 = base.execute(delay_fn=delay)
+    ref = rep0.artifact
+    record("baseline", rep0, prob.n, base_peak)
+
+    budget = CONFIG["budget_slack"] * base_peak
+    pareto: List[Dict] = []
+    bit_identical = True
+    peak_ok = True
+    best = None
+    for t in thresholds:
+        sess = (
+            Session(DeviceMesh())
+            .load(prob)
+            .optimize(max_front=t, memory_budget=budget)
+        )
+        opt = sess.problem
+        cert_peak = sequential_peak(opt.tree, opt.memory_footprints())
+        peak_ok &= bool(cert_peak <= budget * (1 + 1e-9))
+        rep = sess.plan("greedy").execute(delay_fn=delay)
+        bit_identical &= _bit_identical(ref, rep.artifact)
+        record(f"amalg_t{t}", rep, opt.n, cert_peak)
+        leg = {
+            "threshold": t,
+            "makespan_ms": rep.makespan * 1e3,
+            "cert_peak_bytes": cert_peak,
+            "measured_peak_bytes": rep.metrics["measured_peak_bytes"],
+            "n_tasks": opt.n,
+            "n_dispatches": rep.metrics["n_dispatches"],
+        }
+        pareto.append(leg)
+        if best is None or leg["makespan_ms"] < best["makespan_ms"]:
+            best = leg
+
+    summary = {
+        "ndev": ndev,
+        "grid": grid,
+        "n_fronts_original": prob.n,
+        "budget_bytes": budget,
+        "baseline_ms": rep0.makespan * 1e3,
+        "best_threshold": best["threshold"],
+        "best_ms": best["makespan_ms"],
+        "speedup": rep0.makespan * 1e3 / best["makespan_ms"],
+        "task_reduction": prob.n / best["n_tasks"],
+        "bit_identical": bool(bit_identical),
+        "peak_ok": bool(peak_ok),
+        "pareto": pareto,
+    }
+    return rows, summary
+
+
+if __name__ == "__main__":
+    rows, summary = run()
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    print(summary)

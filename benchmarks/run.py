@@ -51,6 +51,7 @@ REGISTRY: Tuple[BenchSpec, ...] = (
     BenchSpec("async", "futures vs wave barrier, straggler-injected A/B", "benchmarks.bench_async", smoke_aware=True),
     BenchSpec("moe_pm", "beyond-paper", "benchmarks.bench_moe_pm"),
     BenchSpec("memory", "memory-bounded: pm vs pm-bounded budget sweep (arXiv:1210.2580)", "benchmarks.bench_memory", smoke_aware=True),
+    BenchSpec("amalgamate", "tree amalgamation: threshold Pareto, many-small-fronts", "benchmarks.bench_amalgamate", smoke_aware=True),
 )
 
 

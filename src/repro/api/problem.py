@@ -38,6 +38,7 @@ class Problem:
     symb: Optional[object] = None  # SymbolicFactorization
     matrix: Optional[object] = None  # the (permuted) sparse matrix symb describes
     footprints: Optional[object] = None  # memory.Footprints override (generic trees)
+    provenance: Optional[object] = None  # optimize.Provenance (amalgamated trees)
     _eq: Optional[np.ndarray] = field(
         default=None, repr=False, compare=False
     )
@@ -138,6 +139,7 @@ class Problem:
             symb=self.symb,
             matrix=self.matrix,
             footprints=self.footprints,
+            provenance=self.provenance,
         )
 
     # -- constructors ---------------------------------------------------

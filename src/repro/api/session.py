@@ -72,6 +72,37 @@ class Session:
         self.schedule = None
         return self
 
+    def optimize(
+        self,
+        *,
+        max_front: Optional[float] = None,
+        max_fill: float = math.inf,
+        memory_budget: Optional[float] = None,
+        max_batch: int = 32,
+    ) -> "Session":
+        """Amalgamate the loaded problem's task tree (cull degenerate
+        fronts, fuse parent–child chains, merge small siblings into
+        batch dispatches) — see :func:`repro.sparse.optimize_problem`.
+
+        The optimized Problem replaces ``self.problem`` and carries the
+        provenance map (optimized task → original fronts); ``plan``
+        serializes it into the schedule's meta and ``execute`` forwards
+        it to the executor so the factors still land in the *original*
+        index space bit-identically.  A finite ``memory_budget`` makes
+        the rewrite back off until its sequential peak fits.
+        """
+        from repro.sparse.optimize import optimize_problem
+
+        self.problem = optimize_problem(
+            self._require_problem(),
+            max_front=max_front,
+            max_fill=max_fill,
+            memory_budget=memory_budget,
+            max_batch=max_batch,
+        )
+        self.schedule = None
+        return self
+
     def _require_problem(self) -> Problem:
         if self.problem is None:
             raise RuntimeError(
@@ -126,6 +157,9 @@ class Session:
                     f"peak memory, over the {budget:.4g} B budget; plan "
                     f"with 'pm-bounded' to stay within it"
                 )
+        if problem.provenance is not None:
+            # ship the amalgamation map with the plan (JSON-serializable)
+            sched.meta["provenance"] = problem.provenance.to_dict()
         self.schedule = sched
         return self
 
@@ -253,6 +287,8 @@ class Session:
                 f"share-based policy) to execute"
             )
         devices = self.platform.devices()
+        if problem.provenance is not None:
+            executor_kwargs.setdefault("provenance", problem.provenance)
         executor = PlanExecutor(
             problem.symb,
             plan,

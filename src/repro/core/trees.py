@@ -14,6 +14,8 @@ statistics family:
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import numpy as np
 
 from .graph import TaskTree
@@ -84,3 +86,90 @@ def star_tree(lengths) -> TaskTree:
     n = len(lengths)
     parent = np.concatenate([[-1], np.zeros(n, dtype=np.int64)])
     return TaskTree(parent=parent, lengths=np.concatenate([[0.0], lengths]))
+
+
+def quotient_tree(
+    tree: TaskTree,
+    groups: Sequence[Sequence[int]],
+    culled: Sequence[int] = (),
+) -> TaskTree:
+    """Contract node groups of an in-tree into a quotient :class:`TaskTree`.
+
+    ``groups`` and ``culled`` must partition ``range(tree.n)``.  Every
+    edge leaving a group must land in one single other group (so the
+    contraction is again a tree — the invariant the amalgamation rewrites
+    in ``repro.sparse.optimize`` rely on) and no retained node may hang
+    under a culled one.  Quotient lengths are the member sums, so total
+    work is conserved up to the culled (zero-length) nodes.  The quotient
+    label of group ``g`` is ``g`` when any member carries a non-negative
+    label, else ``-1`` (all-virtual groups, e.g. a lone virtual root).
+    """
+    n = tree.n
+    group_of = np.full(n, -2, dtype=np.int64)  # -2 unassigned, -1 culled
+    for g, mem in enumerate(groups):
+        for m in mem:
+            m = int(m)
+            if not 0 <= m < n:
+                raise ValueError(f"group {g} member {m} outside [0, {n})")
+            if group_of[m] != -2:
+                raise ValueError(f"node {m} assigned twice")
+            group_of[m] = g
+    for m in culled:
+        m = int(m)
+        if group_of[m] != -2:
+            raise ValueError(f"culled node {m} also grouped")
+        group_of[m] = -1
+    if (group_of == -2).any():
+        missing = np.flatnonzero(group_of == -2)[:5].tolist()
+        raise ValueError(f"groups+culled do not cover the tree: {missing}...")
+
+    ng = len(groups)
+    qparent = np.full(ng, -2, dtype=np.int64)
+    for g, mem in enumerate(groups):
+        if not len(mem):
+            raise ValueError(f"group {g} is empty")
+        for m in mem:
+            p = int(tree.parent[m])
+            if p < 0:
+                gp = -1
+            else:
+                gp = int(group_of[p])
+                if gp == -1:
+                    raise ValueError(
+                        f"retained node {m} hangs under culled node {p}"
+                    )
+                if gp == g:
+                    continue  # internal edge
+            if qparent[g] not in (-2, gp):
+                raise ValueError(
+                    f"group {g} has edges into two groups "
+                    f"({qparent[g]} and {gp}); contraction is not a tree"
+                )
+            qparent[g] = gp
+    if (qparent == -2).any():
+        raise ValueError("a group has no outgoing edge and is not the root")
+    # acyclicity: walking parents from any group must reach a root
+    depth = np.full(ng, -1, dtype=np.int64)
+    for g in range(ng):
+        path = []
+        cur = g
+        while cur >= 0 and depth[cur] < 0:
+            path.append(cur)
+            cur = int(qparent[cur])
+            if len(path) > ng:
+                raise ValueError("group contraction created a cycle")
+        base = 0 if cur < 0 else int(depth[cur]) + 1
+        for k, node in enumerate(reversed(path)):
+            depth[node] = base + k
+
+    qlengths = np.array(
+        [float(tree.lengths[list(mem)].sum()) for mem in groups]
+    )
+    qlabels = np.array(
+        [
+            g if any(int(tree.labels[m]) >= 0 for m in mem) else -1
+            for g, mem in enumerate(groups)
+        ],
+        dtype=np.int64,
+    )
+    return TaskTree(parent=qparent, lengths=qlengths, labels=qlabels)

@@ -354,6 +354,13 @@ class PlanExecutor:
         flight (and shrunk to a single front before being deferred);
         progress is always guaranteed when the pipeline is empty.
     max_workers : async worker threads; defaults to ``max(2, n_devices)``.
+    provenance : amalgamation map (:class:`repro.sparse.optimize.Provenance`)
+        when ``plan`` schedules an *optimized* tree: plan labels are then
+        fused-group ids, and each group dispatch factors its member fronts
+        (children before parents, same-shape members batched per level)
+        against the **original** symbolic structure — extend-add still
+        folds children in tree order, so the factors land in the original
+        index space bit-identically to the unoptimized run.
     """
 
     def __init__(
@@ -370,6 +377,7 @@ class PlanExecutor:
         delay_fn: Optional[DelayFn] = None,
         memory_cap_bytes: Optional[float] = None,
         max_workers: Optional[int] = None,
+        provenance=None,
     ) -> None:
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -399,6 +407,69 @@ class PlanExecutor:
         for s, sn in enumerate(symb.supernodes):
             if sn.parent >= 0:
                 self._children[sn.parent].append(s)
+
+        self._prov = provenance
+        if provenance is not None:
+            self._build_groups(provenance)
+
+    def _build_groups(self, prov) -> None:
+        """Expand the provenance map into executable group structure.
+
+        ``prov.groups`` lists *original tree* indices; through
+        ``prov.labels`` they become supernode ids (virtual nodes drop
+        out).  Every supernode must appear in exactly one group —
+        anything else means the plan and the symbolic analysis disagree.
+        """
+        ns = self.symb.n_supernodes
+        self._groups: List[List[int]] = []
+        self._gid_of = np.full(ns, -1, dtype=np.int64)
+        for g, mem in enumerate(prov.groups):
+            sns = [int(prov.labels[m]) for m in mem if int(prov.labels[m]) >= 0]
+            self._groups.append(sns)
+            for s in sns:
+                if self._gid_of[s] >= 0:
+                    raise ValueError(f"supernode {s} in two provenance groups")
+                self._gid_of[s] = g
+        missing = np.flatnonzero(self._gid_of < 0)
+        if missing.size:
+            raise ValueError(
+                f"provenance does not cover supernodes {missing[:5].tolist()}"
+            )
+        # in-group dependency levels: level 0 = members whose in-group
+        # children are none; a level's members factor together (batched
+        # per shape class), so children always land before their parent
+        self._group_levels: List[List[List[int]]] = []
+        for g, sns in enumerate(self._groups):
+            inset = set(sns)
+            level: Dict[int, int] = {}
+            for s in sorted(sns):  # children have smaller ids (postorder)
+                kids = [c for c in self._children[s] if c in inset]
+                level[s] = 1 + max((level[c] for c in kids), default=-1)
+            levels: List[List[int]] = []
+            for s in sorted(sns):
+                while len(levels) <= level[s]:
+                    levels.append([])
+                levels[level[s]].append(s)
+            self._group_levels.append(levels)
+        # distinct external child groups / the single external parent
+        self._group_ext_children: List[List[int]] = []
+        self._group_parent: List[int] = []
+        for g, sns in enumerate(self._groups):
+            ext = sorted(
+                {
+                    int(self._gid_of[c])
+                    for s in sns
+                    for c in self._children[s]
+                    if self._gid_of[c] != g
+                }
+            )
+            self._group_ext_children.append(ext)
+            pg = -1
+            for s in sns:
+                p = self.symb.supernodes[s].parent
+                if p >= 0 and self._gid_of[p] != g:
+                    pg = int(self._gid_of[p])
+            self._group_parent.append(pg)
 
     # ------------------------------------------------------------------
     def dispatches(self) -> List[_Dispatch]:
@@ -545,12 +616,27 @@ class PlanExecutor:
         return [self.devices[i] for i in idx] or self.devices[:1]
 
     def _projected_peak(self) -> float:
-        """The plan's resident-bytes timeline peak at this dtype."""
+        """The plan's resident-bytes timeline peak at this dtype.
+
+        With a provenance map the plan's tasks are fused groups; each
+        member front inherits its group's span, and the timeline is
+        folded over the *original* tree — the projection stays in the
+        original front space, directly comparable to the measured
+        buffers."""
+        from repro.core.memory import memory_timeline
         from repro.sparse.plan import plan_memory_timeline
 
         tree = self.symb.task_tree()
         fp = self.symb.footprints(itemsize=self.dtype.itemsize).padded(tree.n)
-        return float(plan_memory_timeline(self.plan, tree, fp).peak)
+        if self._prov is None:
+            return float(plan_memory_timeline(self.plan, tree, fp).peak)
+        spans = {}
+        for t in self.plan.tasks:
+            if t.label >= 0:
+                for i in self._prov.groups[t.label]:
+                    spans[int(i)] = (t.start, t.end)
+        parent = np.asarray(self._prov.parent, dtype=np.int64)
+        return float(memory_timeline(parent, spans, fp).peak)
 
     # ------------------------------------------------------------------
     def run(
@@ -558,7 +644,13 @@ class PlanExecutor:
     ) -> Tuple[Factorization, ExecutionReport]:
         """Factorize ``a`` by executing the plan; returns the factorization
         and the measured-vs-projected report.  Dispatches to the async
-        futures runner or the legacy wave runner per ``self.mode``."""
+        futures runner or the legacy wave runner per ``self.mode``; an
+        amalgamated plan (``provenance=``) takes the group-dispatch
+        variants of the same two runners."""
+        if self._prov is not None:
+            if self.mode == "waves":
+                return self._run_waves_prov(a, warmup)
+            return self._run_async_prov(a, warmup)
         if self.mode == "waves":
             return self._run_waves(a, warmup)
         return self._run_async(a, warmup)
@@ -1014,6 +1106,415 @@ class PlanExecutor:
                     raise RuntimeError(
                         "async executor stalled with ready fronts"
                     )
+        finally:
+            pool.shutdown(wait=True)
+
+        assert all(p is not None for p in panels), "plan missed supernodes"
+        report = self._make_report(
+            trace, n_disp, mem_peak, projected_peak, "async"
+        )
+        return Factorization(symb=symb, panels=panels), report  # type: ignore[arg-type]
+
+
+    # -- amalgamated-plan runners (provenance group dispatches) --------
+    def _run_group(
+        self,
+        gid: int,
+        acsc: sp.csc_matrix,
+        ext_cb: Dict[int, Tuple[np.ndarray, np.ndarray]],
+    ) -> Dict:
+        """Factor one fused group's member fronts; the worker body shared
+        by both provenance runners (pure compute — no shared state is
+        mutated, the callers own all bookkeeping).
+
+        ``ext_cb`` holds the Schur complements crossing into the group
+        from already-finished external children.  Levels run children
+        before parents; within a level, same-shape small members factor
+        as **one padded vmapped dispatch** (identity lanes up to the next
+        power of two, so every batch signature was pre-compiled by
+        ``_warmup_async``; vmap lanes are independent, so batching never
+        changes a front's bits) and each member still assembles via
+        ``assemble_front_np`` with its children folded in tree order —
+        the bit-identity discipline of ``_assemble``, unchanged.
+
+        Returns per-member ``(s, panel, schur)`` (``schur`` only for
+        members whose parent lies outside the group), the dispatch's
+        wall-clock interval, and the transient byte peak the group held.
+        """
+        symb = self.symb
+        members = self._groups[gid]
+        inset = set(members)
+        cb = dict(ext_cb)
+        results: List[Tuple[int, np.ndarray, Optional[np.ndarray]]] = []
+        t0 = time.perf_counter()
+        delay = self._delay_for(members)
+        if delay > 0:
+            time.sleep(delay)  # one injected stall per *dispatch*: fused
+            # members share the launch, so a group pays its slowest member
+            # once — the whole point of amalgamation
+        held = float(
+            sum(r.nbytes + u.nbytes for r, u in cb.values())
+        )
+        peak = held
+        panels_local: Dict[int, np.ndarray] = {}
+        for level in self._group_levels[gid]:
+            fronts: Dict[int, np.ndarray] = {}
+            consumed = 0.0
+            for s in level:
+                sn = symb.supernodes[s]
+                kid_updates = [cb[c] for c in self._children[s]]
+                f = assemble_front_np(acsc, sn, kid_updates)
+                fronts[s] = f.astype(self.dtype, copy=False)
+                # extend-add transient: the children's CBs coexist with
+                # the assembled front until this pop
+                peak = max(peak, held + float(fronts[s].nbytes))
+                for c in self._children[s]:
+                    r, u = cb.pop(c)
+                    consumed += float(r.nbytes + u.nbytes)
+                held += float(fronts[s].nbytes)
+            peak = max(peak, held)
+            held -= consumed
+
+            classes: Dict[Tuple[int, int], List[int]] = {}
+            for s in level:
+                sn = symb.supernodes[s]
+                classes.setdefault(padded_shape(sn.m, sn.nb), []).append(s)
+            for key in sorted(classes):
+                mp, nbp = key
+                sns = classes[key]
+                if mp > VMEM_FRONT_MAX:
+                    for s in sns:
+                        sn = symb.supernodes[s]
+                        panel, schur = partial_cholesky(
+                            jnp.asarray(fronts[s]),
+                            sn.nb,
+                            interpret=self.interpret,
+                        )
+                        panels_local[s] = np.asarray(
+                            jax.block_until_ready(panel)
+                        )
+                        if sn.m > sn.nb:
+                            cb[s] = (sn.rows[sn.nb :], np.asarray(schur))
+                    continue
+                for lo in range(0, len(sns), self.max_batch):
+                    chunk = sns[lo : lo + self.max_batch]
+                    batch = np.stack(
+                        [
+                            pad_front_np(
+                                fronts[s], symb.supernodes[s].nb, self.dtype
+                            )
+                            for s in chunk
+                        ]
+                    )
+                    k = len(chunk)
+                    kp = _pow2_ceil(k)
+                    if kp > k:  # identity lanes: exact no-ops, and the
+                        # pow-2 signature is what warmup compiled
+                        eye = np.broadcast_to(
+                            np.eye(mp, dtype=self.dtype), (kp - k, mp, mp)
+                        )
+                        batch = np.concatenate([batch, eye], axis=0)
+                    peak = max(peak, held + float(batch.nbytes))
+                    out = self._run_batch(batch, nbp, self.devices[:1])
+                    for s, o in zip(chunk, out[:k]):
+                        sn = symb.supernodes[s]
+                        panel, schur = extract_panel_schur(o, sn.m, sn.nb)
+                        panels_local[s] = panel
+                        if sn.m > sn.nb:
+                            cb[s] = (sn.rows[sn.nb :], schur)
+            for s in level:
+                sn = symb.supernodes[s]
+                held += float(panels_local[s].nbytes)
+                if sn.m > sn.nb:
+                    held += float(cb[s][1].nbytes + cb[s][0].nbytes)
+                held -= float(fronts[s].nbytes)
+            peak = max(peak, held)
+
+        for s in members:
+            sn = symb.supernodes[s]
+            ext = sn.parent < 0 or sn.parent not in inset
+            schur = cb[s][1] if (ext and sn.m > sn.nb) else None
+            results.append((s, panels_local[s], schur))
+        return {
+            "results": results,
+            "t0": t0,
+            "t1": time.perf_counter(),
+            "transient": peak,
+        }
+
+    def _pop_ext_cb(
+        self,
+        gid: int,
+        updates: Dict[int, Tuple[np.ndarray, np.ndarray]],
+    ) -> Tuple[Dict[int, Tuple[np.ndarray, np.ndarray]], float]:
+        """Pop the Schur complements entering group ``gid`` from outside
+        (main-thread bookkeeping; the bytes stay counted in
+        ``_mem_updates`` until the caller subtracts the returned total —
+        the extend-add transient)."""
+        ext: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        consumed = 0.0
+        for s in self._groups[gid]:
+            for c in self._children[s]:
+                if self._gid_of[c] != gid:
+                    r, u = updates.pop(c)
+                    ext[c] = (r, u)
+                    consumed += float(r.nbytes + u.nbytes)
+        return ext, consumed
+
+    def _store_group(self, res: Dict, panels, updates) -> None:
+        """Land a finished group's results in the shared front space."""
+        for s, panel, schur in res["results"]:
+            sn = self.symb.supernodes[s]
+            panels[s] = panel
+            self._mem_panels += float(panel.nbytes)
+            if schur is not None:
+                updates[s] = (sn.rows[sn.nb :], schur)
+                self._mem_updates += float(
+                    sn.rows[sn.nb :].nbytes + schur.nbytes
+                )
+
+    def _run_waves_prov(
+        self, a: sp.csr_matrix, warmup: bool = True
+    ) -> Tuple[Factorization, ExecutionReport]:
+        """Wave runner over fused groups: same barrier discipline as
+        ``_run_waves``, one dispatch per group task."""
+        symb = self.symb
+        acsc = lower_csc(a)
+        groups = self._wave_groups()  # keyed by group label
+        by_task = {t.label: t for t in self.plan.tasks if t.label >= 0}
+        if warmup:
+            self._warmup_async()  # exact coverage: group batches are
+            # pow-2 sized and unsharded
+        projected_peak = self._projected_peak()
+
+        updates: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        panels: List[Optional[np.ndarray]] = [None] * symb.n_supernodes
+        trace: List[TraceEvent] = []
+        n_disp = 0
+        self._mem_panels = 0.0
+        self._mem_updates = 0.0
+        mem_peak = 0.0
+        t_run0 = time.perf_counter()
+
+        for w, wave in enumerate(self.plan.waves()):
+            for t in sorted(wave, key=lambda t: t.task):
+                if t.label < 0:
+                    continue
+                gid = t.label
+                ext_cb, consumed = self._pop_ext_cb(gid, updates)
+                res = self._run_group(gid, acsc, ext_cb)
+                mem_peak = max(
+                    mem_peak,
+                    self._mem_panels + self._mem_updates + res["transient"],
+                )
+                self._mem_updates -= consumed
+                self._store_group(res, panels, updates)
+                n_disp += 1
+                g = groups.get(gid)
+                t0 = res["t0"] - t_run0
+                t1 = res["t1"] - t_run0
+                for s in self._groups[gid]:
+                    trace.append(
+                        TraceEvent(
+                            front=s,
+                            wave=w,
+                            devices=t.devices,
+                            devices_used=g.size if g else 1,
+                            dispatch_devices=1,
+                            t_start=t0,
+                            t_end=t1,
+                            flops=symb.supernodes[s].flops,
+                            batched=len(self._groups[gid]),
+                        )
+                    )
+
+        assert all(p is not None for p in panels), "plan missed supernodes"
+        report = self._make_report(
+            trace, n_disp, mem_peak, projected_peak, "waves"
+        )
+        return Factorization(symb=symb, panels=panels), report  # type: ignore[arg-type]
+
+    def _run_async_prov(
+        self, a: sp.csr_matrix, warmup: bool = True
+    ) -> Tuple[Factorization, ExecutionReport]:
+        """Async futures runner over fused groups.
+
+        The state machine of ``_run_async`` with the group as the unit of
+        readiness and dispatch: a group is ready when its last external
+        child group completes, its device group is carved from the free
+        set, and its members factor on a worker thread as one dispatch.
+        Groups never coalesce across the provenance partition — the
+        optimizer already chose the batches.
+        """
+        symb = self.symb
+        acsc = lower_csc(a)
+        ndev = len(self.devices)
+        by_task = {t.label: t for t in self.plan.tasks if t.label >= 0}
+        if warmup:
+            self._warmup_async()
+        projected_peak = self._projected_peak()
+
+        ng = len(self._groups)
+        itemsize = self.dtype.itemsize
+        prio = {
+            g: (by_task[g].start if g in by_task else 0.0, g)
+            for g in range(ng)
+        }
+        want = {
+            g: (
+                scale_group(
+                    by_task[g].devices, self.plan.total_devices, ndev
+                )
+                if g in by_task and by_task[g].devices > 0
+                else 1
+            )
+            for g in range(ng)
+        }
+        n_unfinished = np.array(
+            [len(self._group_ext_children[g]) for g in range(ng)],
+            dtype=np.int64,
+        )
+        updates: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        panels: List[Optional[np.ndarray]] = [None] * symb.n_supernodes
+        trace: List[TraceEvent] = []
+        alloc = BuddyAllocator(ndev)
+        in_flight: Dict = {}  # Future -> (gid, group alloc, held, t_submit, seq)
+        t_ready: Dict[int, float] = {}
+        ready: List[int] = []
+        self._mem_panels = 0.0
+        self._mem_updates = 0.0
+        mem_inflight = 0.0
+        mem_peak = 0.0
+        n_done = 0
+        n_disp = 0
+        seq = 0
+        t_run0 = time.perf_counter()
+
+        def now() -> float:
+            return time.perf_counter() - t_run0
+
+        for g in range(ng):
+            if n_unfinished[g] == 0:
+                t_ready[g] = 0.0
+                ready.append(g)
+
+        def est_bytes(gid: int) -> float:
+            return float(
+                sum(
+                    symb.supernodes[s].m ** 2 * itemsize
+                    for s in self._groups[gid]
+                )
+            )
+
+        def launch_ready(pool) -> int:
+            nonlocal mem_inflight, mem_peak, n_disp, seq
+            launched = 0
+            while ready:
+                if alloc.n_free == 0:
+                    break
+                gid = min(ready, key=lambda g: prio[g])
+                if self.memory_cap_bytes is not None:
+                    resident = (
+                        self._mem_panels + self._mem_updates + mem_inflight
+                    )
+                    if resident + est_bytes(gid) > self.memory_cap_bytes:
+                        # a fused dispatch cannot shed members; defer it
+                        # while anything can still free buffers (progress
+                        # is guaranteed when the pipeline drains empty)
+                        if in_flight or launched:
+                            break
+                g_alloc = alloc.alloc(want[gid])
+                if g_alloc is None:
+                    break
+                ready.remove(gid)
+                t_sub = now()
+                ext_cb, consumed = self._pop_ext_cb(gid, updates)
+                held = consumed + est_bytes(gid)
+                mem_peak = max(
+                    mem_peak,
+                    self._mem_panels
+                    + self._mem_updates
+                    + mem_inflight
+                    + est_bytes(gid),
+                )
+                self._mem_updates -= consumed
+                mem_inflight += held
+                fut = pool.submit(self._run_group, gid, acsc, ext_cb)
+                in_flight[fut] = (gid, g_alloc, held, t_sub, seq)
+                seq += 1
+                n_disp += 1
+                launched += 1
+            return launched
+
+        def complete(fut) -> None:
+            nonlocal mem_inflight, mem_peak, n_done
+            gid, g_alloc, held, t_sub, sq = in_flight.pop(fut)
+            res = fut.result()
+            self._store_group(res, panels, updates)
+            mem_inflight -= held
+            mem_peak = max(
+                mem_peak,
+                self._mem_panels
+                + self._mem_updates
+                + mem_inflight
+                + res["transient"]
+                - est_bytes(gid),
+            )
+            alloc.free(g_alloc)
+            t0 = res["t0"] - t_run0
+            t1 = res["t1"] - t_run0
+            for s in self._groups[gid]:
+                trace.append(
+                    TraceEvent(
+                        front=s,
+                        wave=sq,
+                        devices=by_task[gid].devices if gid in by_task else 1,
+                        devices_used=g_alloc.size,
+                        dispatch_devices=1,
+                        t_start=t0,
+                        t_end=t1,
+                        flops=symb.supernodes[s].flops,
+                        batched=len(self._groups[gid]),
+                        t_ready=t_ready[gid],
+                        t_submit=t_sub,
+                    )
+                )
+            pg = self._group_parent[gid]
+            if pg >= 0:
+                n_unfinished[pg] -= 1
+                if n_unfinished[pg] == 0:
+                    t_ready[pg] = t1
+                    ready.append(pg)
+            n_done += 1
+
+        workers = self.max_workers or max(2, ndev)
+        pool = ThreadPoolExecutor(max_workers=workers)
+        try:
+            while n_done < ng:
+                launched = launch_ready(pool)
+                if in_flight:
+                    done, _ = futures_wait(
+                        set(in_flight), return_when=FIRST_COMPLETED
+                    )
+                    for fut in done:
+                        complete(fut)
+                elif not launched and n_done < ng:
+                    # remaining groups are label -1 placeholders with no
+                    # computation (e.g. a lone virtual root)
+                    rest = [g for g in ready if not self._groups[g]]
+                    if not rest:
+                        raise RuntimeError(
+                            "async executor stalled with ready groups"
+                        )
+                    for g in rest:
+                        ready.remove(g)
+                        pg = self._group_parent[g]
+                        if pg >= 0:
+                            n_unfinished[pg] -= 1
+                            if n_unfinished[pg] == 0:
+                                t_ready[pg] = now()
+                                ready.append(pg)
+                        n_done += 1
         finally:
             pool.shutdown(wait=True)
 

@@ -6,13 +6,23 @@ os.environ.setdefault("XLA_FLAGS", "")
 import numpy as np
 import pytest
 
-# Property-test modules guard their hypothesis import with
-# ``pytest.importorskip("hypothesis")`` so a container without dev extras
-# (see requirements-dev.txt) skips them instead of erroring at collection.
+# One shared hypothesis profile for all six property-test modules — the
+# per-test ``@settings(max_examples=...)`` decorators drifted apart, so
+# the knobs live here now: no deadline (interpret-mode kernels are slow),
+# derandomized (CI must not flake), and one example budget — richer on CI
+# where the matrix machines absorb it, leaner locally.  Modules still
+# guard the import itself with ``pytest.importorskip("hypothesis")`` so a
+# container without dev extras (see requirements-dev.txt) skips them
+# instead of erroring at collection.
 try:
     from hypothesis import settings
 
-    settings.register_profile("repro", deadline=None, derandomize=True)
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        derandomize=True,
+        max_examples=40 if os.environ.get("CI") else 20,
+    )
     settings.load_profile("repro")
 except ImportError:
     pass

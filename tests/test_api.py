@@ -266,6 +266,67 @@ def test_schedule_json_roundtrip_golden():
     assert Schedule.from_json(golden.to_json()).to_json() == golden.to_json()
 
 
+def amalgamated_session() -> Session:
+    """Deterministic amalgamated planning session (the v2 golden's
+    generator): many-small-fronts analysis, optimizer pass, greedy plan."""
+    a = grid_laplacian_2d(9)
+    prob = Problem.from_matrix(
+        a, ALPHA, ordering=nested_dissection_2d(9), relax=0, name="grid9r0"
+    )
+    return (
+        Session(SharedMemory(8)).load(prob).optimize(max_front=64).plan("greedy")
+    )
+
+
+def test_schedule_amalgamated_golden_roundtrip():
+    """The amalgamated golden: schema v2 with the provenance map riding
+    in ``meta`` — regenerating it must reproduce the shipped bytes."""
+    path = os.path.join(DATA, "schedule_amalgamated.json")
+    golden = Schedule.load(path)
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["version"] == 2 and doc["memory"] is not None
+    prov_doc = doc["meta"]["provenance"]
+    fresh = amalgamated_session().schedule
+    assert fresh.meta["provenance"] == prov_doc
+    assert golden.makespan == pytest.approx(fresh.makespan, rel=1e-12)
+    assert len(golden.entries) == len(fresh.entries)
+    for g, f in zip(golden.entries, fresh.entries):
+        assert (g.task, g.label) == (f.task, f.label)
+        assert g.share == f.share
+    # byte-stable round-trip: parse → serialize → parse is identity
+    assert Schedule.from_json(golden.to_json()).to_json() == golden.to_json()
+    # the shipped provenance is a partition of the original fronts
+    from repro.sparse.optimize import Provenance
+
+    prov = Provenance.from_dict(prov_doc)
+    cover = sorted([m for g in prov.groups for m in g] + list(prov.culled))
+    assert cover == list(range(prov.n_original))
+
+
+def test_schedule_amalgamated_golden_executes():
+    """A shipped amalgamated plan still drives the executor: rebuild the
+    ExecutionPlan + Provenance from JSON alone (plus the deterministic
+    symbolic analysis) and factorize to a small residual."""
+    from repro.runtime.executor import PlanExecutor
+    from repro.sparse.optimize import Provenance
+
+    path = os.path.join(DATA, "schedule_amalgamated.json")
+    golden = Schedule.load(path)
+    prov = Provenance.from_dict(golden.meta["provenance"])
+    a = grid_laplacian_2d(9)
+    ap = permute_symmetric(a, nested_dissection_2d(9))
+    symb = analyze(ap, relax=0)
+    plan = golden.to_execution_plan()
+    fact, report = PlanExecutor(symb, plan, provenance=prov).run(
+        ap, warmup=False
+    )
+    dense = ap.toarray()
+    l = fact.to_dense_l()
+    assert np.abs(l @ l.T - dense).max() / np.abs(dense).max() < 1e-5
+    assert report.n_dispatches == len(golden.entries)
+
+
 def test_schedule_ships_to_executor_via_json():
     """planner process → JSON → executor process (satellite: plans can
     be cached and shipped)."""

@@ -253,6 +253,74 @@ def test_execute_online_async():
 
 
 # ----------------------------------------------------------------------
+# Bit-identity matrix: {async, waves, sequential} × {optimized, unopt}
+# ----------------------------------------------------------------------
+@pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="the matrix needs real device groups to be a meaningful cross-"
+    "check; CI's forged 8-device job runs this",
+)
+def test_bit_identity_matrix_optimized(problem):
+    """Every runner × every tree rewrite lands the same factor bits.
+
+    The amalgamated plan schedules fused groups, yet each member front
+    still assembles (extend-add in tree order) and factors at its own
+    padded shape class — so all six legs must agree bit-for-bit.  The
+    sequential leg routes ``factorize`` through the *executor's* kernel
+    path (pad → batched vmap factor → extract), not the jnp reference
+    kernel, so it is the same arithmetic by construction.
+    """
+    import jax.numpy as jnp
+
+    from repro.api import DeviceMesh, Problem, Session
+    from repro.kernels.frontal_cholesky import VMEM_FRONT_MAX
+    from repro.kernels.ops import (
+        batched_front_factor,
+        extract_panel_schur,
+        pad_front_np,
+        padded_shape,
+        partial_cholesky,
+    )
+    from repro.sparse import factorize
+
+    ap, symb, plan = problem
+    interpret = jax.default_backend() != "tpu"
+
+    def kernel_factor(f, nb):
+        # the executor's small-front path, one-lane batch
+        fh = np.asarray(f)
+        mp, nbp = padded_shape(fh.shape[0], nb)
+        if mp > VMEM_FRONT_MAX:
+            return partial_cholesky(f, nb, interpret=interpret)
+        batch = pad_front_np(fh, nb, fh.dtype)[None]
+        out = np.asarray(
+            jax.block_until_ready(
+                batched_front_factor(jnp.asarray(batch), nbp, interpret)
+            )
+        )
+        return extract_panel_schur(out[0], fh.shape[0], nb)
+
+    legs = {"sequential/unopt": factorize(ap, symb, factor_fn=kernel_factor)}
+    for mode in MODES:
+        legs[f"{mode}/unopt"], _ = _run(problem, mode)
+
+    prob = Problem.from_symbolic(symb, 0.9, matrix=ap)
+    sess = Session(DeviceMesh()).load(prob).optimize(max_front=64)
+    assert sess.problem.n < prob.n, "amalgamation found nothing to fuse"
+    sess.plan("greedy")
+    for mode in MODES:
+        legs[f"{mode}/opt"] = sess.execute(
+            warmup=False, mode=mode
+        ).artifact
+
+    ref_name, ref = next(iter(legs.items()))
+    for name, fact in legs.items():
+        for s, (pr, pf) in enumerate(zip(ref.panels, fact.panels)):
+            np.testing.assert_array_equal(
+                pr, pf, err_msg=f"panel {s}: {name} != {ref_name}"
+            )
+
+
 @pytest.mark.slow
 def test_async_beats_waves_forged_mesh():
     """The tentpole A/B on a forged 8-device mesh (subprocess owns the

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip if absent
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core import (
     hetero_exact,
@@ -15,7 +15,6 @@ from repro.core import (
 alphas = st.floats(min_value=0.6, max_value=0.95)
 
 
-@settings(max_examples=40, deadline=None)
 @given(
     st.lists(st.floats(0.5, 30.0), min_size=1, max_size=14),
     st.floats(1.0, 120.0),
@@ -29,7 +28,6 @@ def test_subset_sum_fptas_guarantee(xs, target, eps):
     assert sum(xs[i] for i in idx) == pytest.approx(best, rel=1e-12)
 
 
-@settings(max_examples=25, deadline=None)
 @given(
     st.lists(st.floats(0.5, 10.0), min_size=2, max_size=11),
     alphas,

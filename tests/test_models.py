@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip if absent
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.configs import ARCHS
 from repro.models import (
@@ -103,7 +103,6 @@ def test_remat_does_not_change_loss(name):
 # ----------------------------------------------------------------------
 # blocked attention == naive softmax attention
 # ----------------------------------------------------------------------
-@settings(max_examples=12, deadline=None)
 @given(
     st.integers(1, 3),
     st.integers(2, 5),  # T multiplier of block
@@ -172,7 +171,6 @@ def _gla_naive(q, k, v, g, u=None, mode="post"):
     return np.stack(outs, axis=1), s
 
 
-@settings(max_examples=10, deadline=None)
 @given(
     st.integers(1, 2),
     st.sampled_from([7, 8, 16, 19]),

@@ -1,0 +1,248 @@
+"""Amalgamation optimizer invariants (``repro.sparse.optimize``).
+
+The rewrite pass may reshape the tree aggressively — what it must never
+do is change the semantics the planner and executor rely on.  The
+invariants pinned here:
+
+* **partition** — provenance groups + culled nodes partition the
+  original tree's indices exactly;
+* **conservation** — total work is conserved (culled tasks carry zero
+  length), and equivalent lengths are monotone: fusing tasks only
+  *removes* parallelism, so ``orig.eq_root ≤ opt.eq_root ≤ total_work``
+  (Definition 1: series-composition 𝓛 is the sum, parallel is smaller);
+* **§4 validity** — PM and greedy plans of the optimized problem pass
+  the resource / completeness / precedence predicates unchanged;
+* **memory** — with a finite budget the optimized tree's certified
+  sequential peak fits it, and ``plan(memory_budget=)`` certifies;
+* **identity floor** — threshold 0 degrades to cull-only;
+* **round-trip** — Provenance survives JSON.
+
+Each invariant lives in a plain ``check_*`` helper so the seeded tests
+below exercise them even when hypothesis is not installed; the
+property-based suite at the bottom drives the same helpers over random
+trees (shared "repro" profile from conftest).
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.api.problem import Problem
+from repro.core.memory import footprints_from_fronts, sequential_peak
+from repro.core.trees import quotient_tree, random_assembly_tree
+from repro.sparse.optimize import Provenance, optimize_problem
+
+ALPHA = 0.9
+
+
+# ----------------------------------------------------------------------
+# invariant checkers (plain functions: shared by seeded + property tests)
+# ----------------------------------------------------------------------
+def check_partition(prob: Problem, opt: Problem) -> None:
+    prov = opt.provenance
+    assert prov is not None
+    assert prov.n_original == prob.n
+    cover = sorted(
+        [m for g in prov.groups for m in g] + list(prov.culled)
+    )
+    assert cover == list(range(prob.n)), "provenance is not a partition"
+    assert len(prov.groups) == opt.n
+    # culled tasks carry no work
+    assert all(prob.tree.lengths[c] == 0 for c in prov.culled)
+
+
+def check_conservation(prob: Problem, opt: Problem) -> None:
+    assert np.isclose(opt.total_work(), prob.total_work())
+    # fusing replaces parallel composition by series composition, which
+    # can only grow 𝓛 (Definition 1); series-only is the total work
+    assert prob.eq_root <= opt.eq_root * (1 + 1e-9)
+    assert opt.eq_root <= prob.total_work() * (1 + 1e-9)
+
+
+def check_plans_valid(opt: Problem, p: int = 8) -> None:
+    from repro.api import Session, SharedMemory
+
+    for policy in ("pm", "greedy"):
+        sess = Session(SharedMemory(p)).load(opt).plan(policy)
+        sess.schedule.validate(opt)
+
+
+def check_budget(prob: Problem, opt: Problem, budget: float) -> None:
+    fp = opt.memory_footprints()
+    assert fp is not None
+    assert sequential_peak(opt.tree, fp) <= budget * (1 + 1e-9)
+
+
+def check_roundtrip(opt: Problem) -> None:
+    prov = opt.provenance
+    rt = Provenance.from_dict(json.loads(json.dumps(prov.to_dict())))
+    assert rt == prov
+
+
+def random_problem(seed: int, n: int = 40, with_fp: bool = True) -> Problem:
+    rng = np.random.default_rng(seed)
+    tree = random_assembly_tree(n, rng)
+    fp = None
+    if with_fp:
+        m = rng.integers(1, 24, size=n)
+        nb = np.minimum(m, rng.integers(1, 8, size=n))
+        fp = footprints_from_fronts(m, nb)
+    return Problem.from_tree(tree, ALPHA, footprints=fp)
+
+
+# ----------------------------------------------------------------------
+# seeded deterministic coverage (runs with or without hypothesis)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2, 7])
+def test_invariants_random_tree(seed):
+    prob = random_problem(seed)
+    opt = optimize_problem(prob)
+    check_partition(prob, opt)
+    check_conservation(prob, opt)
+    check_plans_valid(opt)
+    check_roundtrip(opt)
+    assert opt.n <= prob.n
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_budget_backoff_certifies(seed):
+    prob = random_problem(seed)
+    orig_peak = prob.min_peak_memory()
+    budget = orig_peak * 1.05
+    opt = optimize_problem(prob, memory_budget=budget)
+    check_partition(prob, opt)
+    check_budget(prob, opt, budget)
+    # and Session.plan certifies the optimized problem against it
+    from repro.api import Session, SharedMemory
+
+    sess = Session(SharedMemory(8)).load(opt)
+    sess.plan("pm-bounded", memory_budget=budget)
+    assert sess.schedule.memory is not None
+    assert sess.schedule.memory.peak <= budget * (1 + 1e-9)
+
+
+def test_infeasible_budget_raises():
+    prob = random_problem(0)
+    with pytest.raises(ValueError, match="sequential minimum"):
+        optimize_problem(prob, memory_budget=prob.min_peak_memory() * 0.5)
+
+
+def test_threshold_zero_is_cull_only():
+    prob = random_problem(5)
+    opt = optimize_problem(prob, max_front=0)
+    prov = opt.provenance
+    assert all(len(g) == 1 for g in prov.groups)
+    # cull-only keeps the tree (and so the PM schedule) intact
+    assert np.isclose(opt.eq_root, prob.eq_root)
+    assert np.isclose(
+        sequential_peak(opt.tree, opt.memory_footprints()),
+        prob.min_peak_memory(),
+    )
+
+
+def test_cull_removes_degenerate_leaves():
+    # a chain with a zero-length zero-footprint leaf hanging off it
+    parent = np.array([-1, 0, 1, 1])
+    lengths = np.array([3.0, 2.0, 1.0, 0.0])
+    tree = __import__("repro.core.graph", fromlist=["TaskTree"]).TaskTree(
+        parent=parent, lengths=lengths
+    )
+    m = np.array([4, 3, 2, 0])
+    nb = np.array([4, 2, 1, 0])
+    prob = Problem.from_tree(tree, ALPHA, footprints=footprints_from_fronts(m, nb))
+    opt = optimize_problem(prob, max_front=0)
+    assert opt.provenance.culled == (3,)
+    assert opt.n == 3
+    check_partition(prob, opt)
+    check_conservation(prob, opt)
+
+
+def test_double_optimize_rejected():
+    opt = optimize_problem(random_problem(0))
+    with pytest.raises(ValueError, match="provenance"):
+        optimize_problem(opt)
+
+
+def test_quotient_tree_rejects_non_tree_contractions():
+    from repro.core.graph import TaskTree
+
+    #      0
+    #     / \
+    #    1   2
+    #   /     \
+    #  3       4
+    tree = TaskTree(
+        parent=np.array([-1, 0, 0, 1, 2]), lengths=np.ones(5)
+    )
+    # {3, 4} has edges into both {1} and {2}: not a tree
+    with pytest.raises(ValueError, match="not a tree"):
+        quotient_tree(tree, [[0], [1], [2], [3, 4]])
+    # double assignment
+    with pytest.raises(ValueError, match="twice"):
+        quotient_tree(tree, [[0, 1], [1, 2], [3], [4]])
+    # non-coverage
+    with pytest.raises(ValueError, match="cover"):
+        quotient_tree(tree, [[0], [1], [2], [3]])
+    # retained node under a culled one
+    with pytest.raises(ValueError, match="culled"):
+        quotient_tree(tree, [[0], [2], [3], [4]], culled=[1])
+    # a valid contraction, for contrast
+    q = quotient_tree(tree, [[0], [1, 3], [2, 4]])
+    assert q.n == 3
+    assert list(q.parent) == [-1, 0, 0]
+    assert list(q.lengths) == [1.0, 2.0, 2.0]
+
+
+def test_sparse_problem_counts_and_bits():
+    """Dispatch-level fusion on a real matrix: fewer tasks, same factors."""
+    import jax
+
+    from repro.sparse import grid_laplacian_2d, nested_dissection_2d
+
+    jax.config.update("jax_enable_x64", True)
+    try:
+        g = 9
+        a = grid_laplacian_2d(g)
+        prob = Problem.from_matrix(
+            a, ALPHA, ordering=nested_dissection_2d(g), relax=0
+        )
+        opt = optimize_problem(prob, max_front=64)
+        assert opt.n < prob.n
+        check_partition(prob, opt)
+        check_conservation(prob, opt)
+        check_plans_valid(opt)
+        # optimized execution lands factors in the original index space
+        from repro.api import DeviceMesh, Session
+
+        ref = (
+            Session(DeviceMesh(plan_devices=8))
+            .load(prob)
+            .plan("greedy")
+            .execute(warmup=False, mode="waves")
+            .artifact.to_dense_l()
+        )
+        sess = Session(DeviceMesh(plan_devices=8)).load(opt).plan("greedy")
+        assert "provenance" in sess.schedule.meta
+        for mode in ("waves", "async"):
+            l = sess.execute(warmup=False, mode=mode).artifact.to_dense_l()
+            np.testing.assert_array_equal(ref, l)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_session_optimize_chain():
+    from repro.api import Session, SharedMemory
+
+    prob = random_problem(2)
+    sess = Session(SharedMemory(8)).load(prob).optimize()
+    assert sess.problem.provenance is not None
+    assert sess.schedule is None  # optimize invalidates any prior plan
+    sess.plan("pm")
+    assert sess.schedule.meta["provenance"]["n_original"] == prob.n
+
+
+# The property-based half of this suite drives the same ``check_*``
+# helpers over hypothesis-generated trees — see
+# ``tests/test_optimize_props.py`` (kept separate so these seeded tests
+# run even in a container without the hypothesis dev extra).

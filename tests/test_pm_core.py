@@ -10,7 +10,7 @@ Property tests check the exact invariants the paper proves:
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip if absent
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core import (
     Profile,
@@ -89,7 +89,6 @@ def test_parallel_bounds(alpha, a, b):
 # ----------------------------------------------------------------------
 # Theorem 6 / Lemma 4
 # ----------------------------------------------------------------------
-@settings(max_examples=30, deadline=None)
 @given(small_trees(), alphas, st.floats(2.0, 100.0))
 def test_pm_schedule_valid_and_optimal_makespan(tree, alpha, p):
     prof = Profile.constant(p)
@@ -99,7 +98,6 @@ def test_pm_schedule_valid_and_optimal_makespan(tree, alpha, p):
     assert sched.makespan() == pytest.approx(eq[tree.root] / p**alpha, rel=1e-9)
 
 
-@settings(max_examples=20, deadline=None)
 @given(small_trees(max_n=20), alphas)
 def test_siblings_finish_simultaneously(tree, alpha):
     w_start, w_end, ratio = tree_pm_windows(tree, alpha)
@@ -111,7 +109,6 @@ def test_siblings_finish_simultaneously(tree, alpha):
             assert max(ends) - min(ends) < 1e-9 * max(1.0, max(ends))
 
 
-@settings(max_examples=20, deadline=None)
 @given(small_trees(max_n=25), alphas, st.integers(0, 2**31))
 def test_pm_beats_random_constant_share_schedules(tree, alpha, seed):
     rng = np.random.default_rng(seed)
@@ -160,7 +157,6 @@ def test_profile_work_inversion_roundtrip():
 # ----------------------------------------------------------------------
 # §7 baselines + aggregation
 # ----------------------------------------------------------------------
-@settings(max_examples=15, deadline=None)
 @given(small_trees(max_n=30), alphas)
 def test_strategy_ordering(tree, alpha):
     p = 40.0
@@ -186,7 +182,6 @@ def test_divisible_is_total_work(rng):
     )
 
 
-@settings(max_examples=10, deadline=None)
 @given(small_trees(max_n=30), alphas)
 def test_aggregation_invariants(tree, alpha):
     p = 40.0

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip if absent
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core import Profile
 
@@ -17,14 +17,12 @@ def profiles(draw):
     return Profile.of(steps)
 
 
-@settings(max_examples=40, deadline=None)
 @given(profiles(), st.floats(0.55, 1.0), st.floats(0.01, 40.0))
 def test_work_time_inversion_roundtrip(prof, alpha, t):
     w = prof.work_until(t, alpha)
     assert prof.time_for_work(w, alpha) == pytest.approx(t, rel=1e-9, abs=1e-9)
 
 
-@settings(max_examples=40, deadline=None)
 @given(profiles(), st.floats(0.55, 1.0), st.floats(0.0, 10.0), st.floats(0.0, 10.0))
 def test_work_is_monotone_and_additive(prof, alpha, t1, dt):
     w1 = prof.work_until(t1, alpha)
@@ -35,7 +33,6 @@ def test_work_is_monotone_and_additive(prof, alpha, t1, dt):
     assert rest.work_until(dt, alpha) == pytest.approx(w2 - w1, rel=1e-6, abs=1e-9)
 
 
-@settings(max_examples=30, deadline=None)
 @given(profiles(), st.floats(0.55, 1.0), st.floats(1.1, 4.0))
 def test_scaling_speeds_up(prof, alpha, f):
     big = prof.scaled(f)

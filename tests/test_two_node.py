@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip if absent
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core import (
     TaskTree,
@@ -29,7 +29,6 @@ def trees(draw, max_n=30):
 alphas = st.floats(min_value=0.6, max_value=0.95)
 
 
-@settings(max_examples=30, deadline=None)
 @given(trees(), alphas, st.floats(4.0, 64.0))
 def test_alg11_basic_invariants(tree, alpha, p):
     res = homogeneous_two_node(tree, alpha, p)
@@ -41,7 +40,6 @@ def test_alg11_basic_invariants(tree, alpha, p):
     assert set(res.placement.values()) <= {0, 1}
 
 
-@settings(max_examples=40, deadline=None)
 @given(trees(), alphas, st.floats(4.0, 64.0))
 def test_alg11_fluid_respects_proof_bound(tree, alpha, p):
     """Reproduction finding (recorded in DESIGN.md §Repro-notes): the
@@ -62,7 +60,6 @@ def test_alg11_fluid_respects_proof_bound(tree, alpha, p):
     assert res.makespan <= bound * (1 + 1e-9)
 
 
-@settings(max_examples=15, deadline=None)
 @given(
     st.lists(st.floats(0.5, 20.0), min_size=2, max_size=10),
     alphas,
@@ -101,7 +98,6 @@ def test_chain_tree_single_node():
 
 
 # ----------------------------------------------------------------------
-@settings(max_examples=25, deadline=None)
 @given(trees(max_n=20), alphas, st.floats(0.05, 0.95))
 def test_split_tree_conserves_equivalent_length_fluid(tree, alpha, frac):
     eq = tree_equivalent_lengths(tree, alpha)[tree.root]
@@ -114,7 +110,6 @@ def test_split_tree_conserves_equivalent_length_fluid(tree, alpha, frac):
     assert eq_suf == pytest.approx(cut, rel=1e-6)
 
 
-@settings(max_examples=25, deadline=None)
 @given(trees(max_n=20), alphas, st.floats(0.05, 0.95))
 def test_split_tree_snap_conserves_work(tree, alpha, frac):
     eq = tree_equivalent_lengths(tree, alpha)[tree.root]
