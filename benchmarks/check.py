@@ -97,8 +97,30 @@ def _apply(check: Dict, value: Any) -> tuple[bool, str, str]:
     raise ValueError(f"check has no known predicate: {check}")
 
 
+def _null_paths(node: Any, prefix: str) -> List[str]:
+    """Dotted paths of every ``null`` value under ``node``."""
+    if node is None:
+        return [prefix]
+    out: List[str] = []
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.extend(_null_paths(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.extend(_null_paths(v, f"{prefix}[{i}]"))
+    return out
+
+
 def check_doc(bench: str, doc: Dict, spec: Dict) -> List[Verdict]:
     out: List[Verdict] = []
+    # a null metric value means a bench silently measured nothing — fail
+    # loudly instead of letting ``None`` ride through the JSON artifact
+    for section in ("metrics", "summary"):
+        for path in _null_paths(doc.get(section, {}), section):
+            out.append(
+                Verdict(bench, path, "non-null", None, False,
+                        "null metric value")
+            )
     for check in spec.get("checks", []):
         path = check["path"]
         try:

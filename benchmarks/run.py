@@ -52,6 +52,7 @@ REGISTRY: Tuple[BenchSpec, ...] = (
     BenchSpec("moe_pm", "beyond-paper", "benchmarks.bench_moe_pm"),
     BenchSpec("memory", "memory-bounded: pm vs pm-bounded budget sweep (arXiv:1210.2580)", "benchmarks.bench_memory", smoke_aware=True),
     BenchSpec("amalgamate", "tree amalgamation: threshold Pareto, many-small-fronts", "benchmarks.bench_amalgamate", smoke_aware=True),
+    BenchSpec("obs", "telemetry: fluid-ratio fidelity, zero-overhead disable, span hygiene", "benchmarks.bench_obs", smoke_aware=True),
 )
 
 

@@ -356,24 +356,14 @@ class Schedule:
         return "\n".join([header] + rows)
 
     def to_trace(self, time_scale: float = 1e6) -> List[Dict]:
-        """Chrome trace-event export (load in ui.perfetto.dev)."""
-        out = []
-        for e in self.entries:
-            if e.end <= e.start:
-                continue
-            out.append(
-                {
-                    "name": f"task {e.label}",
-                    "cat": self.policy,
-                    "ph": "X",
-                    "ts": e.start * time_scale,
-                    "dur": e.duration * time_scale,
-                    "pid": 0,
-                    "tid": e.task,
-                    "args": {"share": e.share},
-                }
-            )
-        return out
+        """Chrome trace-event export (load in ui.perfetto.dev).
+
+        Thin wrapper over :func:`repro.obs.trace.from_schedule` — all
+        trace emitters share one field set.
+        """
+        from repro.obs import trace as obs_trace
+
+        return obs_trace.from_schedule(self, time_scale)
 
     # -- conversions from the legacy result types -----------------------
     @classmethod
@@ -557,6 +547,30 @@ class RunReport:
         )
         extras = [f"{k}={v:.6g}" for k, v in sorted(self.metrics.items())]
         return head + (" | " + " ".join(extras) if extras else "")
+
+    def save_html(self, path) -> str:
+        """Dump the run as a static HTML observability report.
+
+        The same page the live dashboard serves, rendered from the
+        process bus/registry with this report's run-level numbers
+        (makespan, fluid bound, device count) as context.  Returns the
+        written path.
+        """
+        from repro.obs.dashboard import save_html_report
+
+        context = {
+            "makespan": self.makespan,
+            "fluid_makespan": self.fluid_makespan,
+            "subtitle": self.summary(),
+        }
+        n_dev = self.metrics.get("n_devices")
+        if n_dev:
+            context["n_devices"] = int(n_dev)
+        return save_html_report(
+            path,
+            title=f"repro {self.kind} run — {self.schedule.policy}",
+            context=context,
+        )
 
 
 __all__ = ["RunReport", "Schedule", "ShareEntry"]

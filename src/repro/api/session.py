@@ -35,6 +35,21 @@ from .problem import Problem, as_problem
 from .schedule import RunReport, Schedule
 
 
+def _clean_metrics(metrics: dict) -> dict:
+    """Drop unknown (None / NaN) metric values instead of storing null.
+
+    A metric a run could not measure (e.g. ready latency on the wave
+    path) is *absent*, not null — consumers ``get()`` it, JSON artifacts
+    never carry ``null``, and ``benchmarks/check.py`` treats any null
+    that does slip through as a failure.
+    """
+    return {
+        k: float(v)
+        for k, v in metrics.items()
+        if v is not None and not (isinstance(v, float) and math.isnan(v))
+    }
+
+
 class Session:
     """A scheduling session on one platform.
 
@@ -48,6 +63,7 @@ class Session:
         self.platform: Platform = as_platform(platform)
         self.problem: Optional[Problem] = None
         self.schedule: Optional[Schedule] = None
+        self.dashboard = None  # live obs dashboard (serve(dashboard_port=))
 
     # -- problem setup --------------------------------------------------
     def analyze(
@@ -236,17 +252,23 @@ class Session:
             tree_id=0,
         )
         realized.attach_memory(problem)
+        fluid = realized.fluid_makespan
         return RunReport(
             kind="simulated",
             schedule=realized,
             makespan=report.makespan,
-            fluid_makespan=realized.fluid_makespan,
+            fluid_makespan=fluid,
             planned=self.schedule,
-            metrics={
-                "utilization": report.utilization,
-                "n_events": float(report.n_events),
-                "n_reshares": float(report.n_reshares),
-            },
+            metrics=_clean_metrics(
+                {
+                    "utilization": report.utilization,
+                    "n_events": float(report.n_events),
+                    "n_reshares": float(report.n_reshares),
+                    "fluid_ratio": (
+                        report.makespan / fluid if fluid > 0 else None
+                    ),
+                }
+            ),
             detail=report,
         )
 
@@ -311,23 +333,27 @@ class Session:
             makespan=report.measured_makespan,
             fluid_makespan=fluid_seconds,
             planned=schedule,
-            metrics={
-                "measured_rate": report.measured_rate(),
-                "n_dispatches": float(report.n_dispatches),
-                "n_devices": float(report.n_devices),
-                "projected_seconds": report.projected_seconds(),
-                # the memory dimension, measured on the real buffers vs.
-                # projected from the plan's timeline
-                "measured_peak_bytes": report.measured_peak_bytes,
-                "projected_peak_bytes": report.projected_peak_bytes,
-                # async-mode observable; NaN-free only when fronts record
-                # readiness (the wave path has no per-front ready instant)
-                "mean_ready_latency_s": (
-                    lat
-                    if (lat := report.mean_ready_latency()) is not None
-                    else float("nan")
-                ),
-            },
+            metrics=_clean_metrics(
+                {
+                    "measured_rate": report.measured_rate(),
+                    "n_dispatches": float(report.n_dispatches),
+                    "n_devices": float(report.n_devices),
+                    "projected_seconds": report.projected_seconds(),
+                    # the memory dimension, measured on the real buffers
+                    # vs. projected from the plan's timeline
+                    "measured_peak_bytes": report.measured_peak_bytes,
+                    "projected_peak_bytes": report.projected_peak_bytes,
+                    "fluid_ratio": (
+                        report.measured_makespan / fluid_seconds
+                        if fluid_seconds > 0
+                        else None
+                    ),
+                    # async-mode observable: the key is simply absent on
+                    # the wave path (no per-front ready instant), never
+                    # null
+                    "mean_ready_latency_s": report.mean_ready_latency(),
+                }
+            ),
             detail=report,
             artifact=fact,
         )
@@ -343,6 +369,7 @@ class Session:
         speedup_floor: bool = False,
         alpha: Optional[float] = None,
         memory_budget: Optional[float] = None,
+        dashboard_port: Optional[int] = None,
     ) -> RunReport:
         """Serve a stream of tree requests on this platform.
 
@@ -356,8 +383,22 @@ class Session:
         when its minimal peak fits next to the already-admitted trees'
         peaks (delayed otherwise), and a tree that can never fit is
         refused at submission.
+
+        ``dashboard_port`` starts the live observability dashboard
+        (``repro.obs.dashboard.Dashboard``) on that port (0 = auto) for
+        the duration of the serve loop and leaves it running on
+        ``self.dashboard`` afterwards — browse ``self.dashboard.url``,
+        stop it with ``self.dashboard.stop()``.
         """
         from repro.online.queue import TreeRequest, serve_trees
+
+        if dashboard_port is not None:
+            from repro.obs.dashboard import Dashboard
+
+            self.dashboard = Dashboard(
+                dashboard_port,
+                context={"subtitle": f"serving on {self.platform.describe()}"},
+            )
 
         items = list(stream)
         if alpha is None and self.problem is not None:
@@ -410,19 +451,34 @@ class Session:
             policy=f"serve-{policy}",
             platform=self.platform.describe(),
         )
-        return RunReport(
+        fluid = realized.fluid_makespan
+        run = RunReport(
             kind="served",
             schedule=realized,
             makespan=report.makespan,
-            fluid_makespan=realized.fluid_makespan,
+            fluid_makespan=fluid,
             planned=self.schedule,
-            metrics={
-                "mean_latency": report.mean_latency(),
-                "mean_service": report.mean_service(),
-                "utilization": report.utilization,
-            },
+            metrics=_clean_metrics(
+                {
+                    "mean_latency": report.mean_latency(),
+                    "mean_service": report.mean_service(),
+                    "utilization": report.utilization,
+                    "fluid_ratio": (
+                        report.makespan / fluid if fluid > 0 else None
+                    ),
+                }
+            ),
             detail=report,
         )
+        dash = getattr(self, "dashboard", None)
+        if dash is not None:
+            dash.update_context(
+                makespan=run.makespan,
+                fluid_makespan=run.fluid_makespan,
+                subtitle=f"served {len(reqs)} trees on "
+                f"{self.platform.describe()}",
+            )
+        return run
 
     # ------------------------------------------------------------------
     def __repr__(self) -> str:

@@ -110,6 +110,20 @@ class BuddyAllocator:
     def n_free(self) -> int:
         return int(self._free.sum())
 
+    @property
+    def fragmentation(self) -> float:
+        """1 − largest contiguous free run / free devices (0.0 when the
+        free set is one block or empty) — how much of the free capacity
+        a maximal aligned carve cannot reach."""
+        free = int(self._free.sum())
+        if free == 0:
+            return 0.0
+        run = best = 0
+        for f in self._free:
+            run = run + 1 if f else 0
+            best = max(best, run)
+        return 1.0 - best / free
+
     def alloc(self, size: int) -> "DeviceGroup | None":
         """Carve a group of up to ``size`` devices; halves under pressure.
 

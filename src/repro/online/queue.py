@@ -90,6 +90,12 @@ class AdmissionQueue:
         self._pending.append(
             _Pending(tree_id, tenant, float(eq), next(self._seq), float(mem))
         )
+        from repro.obs import metrics as obs_metrics
+
+        obs_metrics.REGISTRY.counter(
+            "repro_admission_requests_total",
+            "requests entering the admission queue, by tenant",
+        ).inc(tenant=tenant)
 
     @staticmethod
     def _fits(p: _Pending, mem_free: float) -> bool:

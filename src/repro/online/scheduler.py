@@ -47,6 +47,8 @@ from repro.core.graph import TaskTree
 from repro.core.pm import tree_equivalent_lengths, tree_pm_ratios
 from repro.core.profiles import Profile
 from repro.core.schedule import ExplicitSchedule
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
 
 from .events import (
     Arrival,
@@ -440,6 +442,7 @@ class OnlineScheduler:
         return self.memory_capacity - in_use
 
     def _try_admit(self) -> None:
+        admitted_any = False
         while self.admission.can_admit(len(self.admitted), self._mem_free()):
             pend = self.admission.pop_next(
                 self.service_by_tenant, self._mem_free()
@@ -447,12 +450,20 @@ class OnlineScheduler:
             run = self.runs[pend.tree_id]
             self.admitted.append(pend.tree_id)
             run.admit(self.clock.now)
+            admitted_any = True
             if self.policy == "static":
                 self._frozen[pend.tree_id] = tree_pm_ratios(
                     run.tree, self.alpha
                 )
             elif self.policy == "static-proportional":
                 self._frozen[pend.tree_id] = proportional_shares(run.tree, 1.0)
+        if admitted_any and obs_events.enabled():
+            obs_events.BUS.point(
+                "admission_queue_depth",
+                len(self.admission),
+                t=self.clock.now,
+                clock=obs_events.VIRTUAL,
+            )
 
     # ------------------------------------------------------------------
     def _reshare(self) -> None:
@@ -531,7 +542,7 @@ class OnlineScheduler:
             if self._cap_integral > 0
             else 0.0
         )
-        return OnlineReport(
+        report = OnlineReport(
             alpha=self.alpha,
             policy=self.policy,
             makespan=float(t_end),
@@ -544,6 +555,76 @@ class OnlineScheduler:
             utilization=float(util),
             runs=dict(self.runs),
         )
+        if obs_events.enabled():
+            self._publish_obs(report)
+        return report
+
+    def _publish_obs(self, report: OnlineReport) -> None:
+        """Publish the run to the obs bus (virtual clock) and registry.
+
+        One ``tree`` span per admitted tree (admit → done), one ``task``
+        span per task (start → done), capacity steps as a counter track,
+        and the per-tenant admission wait into its histogram — the §4
+        share pieces themselves stay on ``report.schedule`` (the
+        efficiency module folds them into p̂(t) directly).
+        """
+        bus = obs_events.BUS
+        reg = obs_metrics.REGISTRY
+        wait_h = reg.histogram(
+            "repro_admission_wait_seconds",
+            "request arrival -> admission (virtual time)",
+            unit="s",
+        )
+        for k, run in report.runs.items():
+            fut = run.future
+            if not math.isnan(fut.t_admit) and not math.isnan(fut.t_done):
+                bus.span(
+                    "run",
+                    fut.t_admit,
+                    fut.t_done,
+                    cat="tree",
+                    key=k,
+                    clock=obs_events.VIRTUAL,
+                    tenant=fut.tenant,
+                    failed=run.failed(),
+                )
+            if not math.isnan(fut.t_admit):
+                wait = fut.t_admit - fut.t_submit
+                wait_h.observe(wait)
+                if wait > 0:
+                    bus.span(
+                        "ready",
+                        fut.t_submit,
+                        fut.t_admit,
+                        cat="tree",
+                        key=k,
+                        clock=obs_events.VIRTUAL,
+                        tenant=fut.tenant,
+                    )
+            for i, ts in enumerate(run.tasks):
+                if not math.isnan(ts.t_start) and not math.isnan(ts.t_done):
+                    if ts.t_done > ts.t_start:
+                        bus.span(
+                            "run",
+                            ts.t_start,
+                            ts.t_done,
+                            cat="task",
+                            key=run.label_base + i,
+                            clock=obs_events.VIRTUAL,
+                            tree=k,
+                        )
+        for t, cap in report.capacity_steps:
+            bus.point("capacity", cap, t=t, clock=obs_events.VIRTUAL)
+        reg.counter(
+            "repro_online_events_total", "online scheduler events processed"
+        ).inc(report.n_events)
+        reg.counter(
+            "repro_online_reshares_total", "Lemma-4 O(n) re-shares"
+        ).inc(report.n_reshares)
+        reg.gauge(
+            "repro_online_utilization",
+            "busy-share integral / capacity integral",
+        ).set(report.utilization)
 
 
 __all__ = ["OnlineReport", "OnlineScheduler", "SHARE_POLICIES"]

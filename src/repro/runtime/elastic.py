@@ -25,6 +25,8 @@ import numpy as np
 from repro.core.graph import TaskTree
 from repro.core.pm import tree_equivalent_lengths
 from repro.core.profiles import Profile
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
 from repro.online.events import EventQueue, SetCapacity
 from repro.sparse.plan import ExecutionPlan, make_plan, replan_elastic
 
@@ -115,6 +117,30 @@ def run_elastic_schedule(
     for ev in failures:
         queue.push(ev.time, SetCapacity(float(ev.devices)))
     guard = 0
+
+    def publish(t0: float, t1: float, devs: int) -> None:
+        """Each plan segment is a virtual-clock span; capacity edits
+        become a counter track next to the online scheduler's."""
+        if not obs_events.enabled():
+            return
+        if t1 > t0:
+            obs_events.BUS.span(
+                "run",
+                t0,
+                t1,
+                cat="plan",
+                key=len(plans) - 1,
+                clock=obs_events.VIRTUAL,
+                devices=devs,
+            )
+        obs_events.BUS.point(
+            "capacity", devs, t=t1, clock=obs_events.VIRTUAL
+        )
+        obs_metrics.REGISTRY.counter(
+            "repro_elastic_replans_total",
+            "residual replans after capacity events",
+        ).inc()
+
     while True:
         guard += 1
         if guard > len(failures) + 10:
@@ -127,12 +153,14 @@ def run_elastic_schedule(
             # execute until the event, then rebuild residual work
             local_t = ev.time - t_global
             residual = _residual_tree(remaining, plan, local_t)
+            publish(t_global, ev.time, devices)
             t_global = ev.time
             devices = int(ev.payload.capacity)
             remaining = residual
             if remaining.lengths.sum() <= 1e-12:
                 return t_global, plans
         else:
+            publish(t_global, end, devices)
             return end, plans
 
 

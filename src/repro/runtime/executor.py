@@ -78,6 +78,9 @@ from repro.distributed.device_groups import (
     scale_group,
 )
 from repro.kernels.frontal_cholesky import VMEM_FRONT_MAX
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.kernels.ops import (
     batched_front_factor,
     extract_panel_schur,
@@ -121,6 +124,7 @@ class TraceEvent:
     # per-front ready instant — readiness is the wave barrier itself)
     t_ready: float = math.nan  # children done → front became dispatchable
     t_submit: float = math.nan  # handed to a worker / dispatch issued
+    device0: int = -1  # first device lane of the carved group (mesh index)
 
     @property
     def duration(self) -> float:
@@ -239,38 +243,13 @@ class ExecutionReport:
     def to_trace(self, time_scale: float = 1e6) -> List[Dict]:
         """Chrome trace-event export (load in ui.perfetto.dev).
 
-        One ``X`` slice per front on its dispatch's row; async-mode
-        ready/dispatch latencies land in ``args`` so the stall structure
-        (waiting-for-devices vs running) is visible next to the slices.
+        Thin wrapper over :func:`repro.obs.trace.from_execution_report`
+        — all trace emitters share one field set.  One ``X`` slice per
+        front on its dispatch's row; async-mode ready/dispatch latencies
+        land in ``args`` so the stall structure (waiting-for-devices vs
+        running) is visible next to the slices.
         """
-        out: List[Dict] = []
-        for e in self.trace:
-            if e.t_end <= e.t_start:
-                continue
-            args: Dict = {
-                "devices_planned": e.devices,
-                "devices_used": e.devices_used,
-                "dispatch_devices": e.dispatch_devices,
-                "batched": e.batched,
-                "flops": e.flops,
-            }
-            if not math.isnan(e.t_ready):
-                args["ready_latency_s"] = e.ready_latency
-            if not math.isnan(e.t_submit):
-                args["dispatch_latency_s"] = e.dispatch_latency
-            out.append(
-                {
-                    "name": f"front {e.front}",
-                    "cat": self.mode,
-                    "ph": "X",
-                    "ts": e.t_start * time_scale,
-                    "dur": e.duration * time_scale,
-                    "pid": 0,
-                    "tid": e.wave,
-                    "args": args,
-                }
-            )
-        return out
+        return obs_trace.from_execution_report(self, time_scale)
 
     def summary(self) -> str:
         a_fit = self.fit_alpha()
@@ -675,12 +654,24 @@ class PlanExecutor:
         )
         consumed = 0.0
         kid_updates = []
+        t_a0 = time.perf_counter()
         for c in kids:
             rows_c, upd_c = updates.pop(c)
             consumed += float(rows_c.nbytes + upd_c.nbytes)
             kid_updates.append((rows_c, upd_c))
         f = assemble_front_np(acsc, sn, kid_updates)
-        return f.astype(self.dtype, copy=False), consumed
+        out = f.astype(self.dtype, copy=False)
+        epoch = getattr(self, "_obs_t0", None)
+        if epoch is not None and obs_events.enabled():
+            obs_events.BUS.span(
+                "assemble",
+                t_a0 - epoch,
+                time.perf_counter() - epoch,
+                cat="front",
+                key=s,
+                children=len(kids),
+            )
+        return out, consumed
 
     def _store(self, s, panel, schur, panels, updates) -> None:
         """Record a factored front: keep the panel, queue the Schur
@@ -701,6 +692,16 @@ class PlanExecutor:
         mode: str,
     ) -> ExecutionReport:
         measured = max((e.t_end for e in trace), default=0.0)
+        report = self._build_report(
+            trace, n_disp, mem_peak, projected_peak, mode, measured
+        )
+        if obs_events.enabled():
+            _publish_report_obs(report)
+        return report
+
+    def _build_report(
+        self, trace, n_disp, mem_peak, projected_peak, mode, measured
+    ) -> ExecutionReport:
         return ExecutionReport(
             plan_makespan=self.plan.makespan,
             plan_alpha=self.plan.alpha,
@@ -740,6 +741,7 @@ class PlanExecutor:
         self._mem_updates = 0.0
         mem_peak = 0.0
         t_run0 = time.perf_counter()
+        self._obs_t0 = t_run0
 
         for d in ds:
             fronts = []
@@ -815,6 +817,7 @@ class PlanExecutor:
                         t_end=t1,
                         flops=sn.flops,
                         batched=len(d.supernodes),
+                        device0=g.offset if g else 0,
                     )
                 )
 
@@ -882,9 +885,48 @@ class PlanExecutor:
         seq = 0
 
         t_run0 = time.perf_counter()
+        self._obs_t0 = t_run0
 
         def now() -> float:
             return time.perf_counter() - t_run0
+
+        def publish_state() -> None:
+            """Live counter samples: the bus points become perfetto
+            counter tracks; the gauges feed the dashboard."""
+            if not obs_events.enabled():
+                return
+            t = now()
+            bus = obs_events.BUS
+            bus.point("queue_depth", len(ready), t=t)
+            bus.point(
+                "resident_bytes",
+                self._mem_panels + self._mem_updates + mem_inflight,
+                t=t,
+            )
+            reg = obs_metrics.REGISTRY
+            reg.gauge(
+                "repro_queue_depth",
+                "ready fronts awaiting dispatch",
+                unit="fronts",
+                track=True,
+            ).set(len(ready), t=t)
+            reg.gauge(
+                "repro_resident_bytes",
+                "live host buffers (panels + CBs + in-flight)",
+                unit="bytes",
+                track=True,
+            ).set(
+                self._mem_panels + self._mem_updates + mem_inflight, t=t
+            )
+            reg.gauge(
+                "repro_buddy_free_devices",
+                "free devices in the buddy allocator",
+                unit="devices",
+            ).set(alloc.n_free, t=t)
+            reg.gauge(
+                "repro_buddy_fragmentation",
+                "1 - largest free run / free devices",
+            ).set(alloc.fragmentation, t=t)
 
         for s in range(n):
             if n_unfinished[s] == 0:
@@ -1042,6 +1084,7 @@ class PlanExecutor:
                 seq += 1
                 n_disp += 1
                 launched += 1
+                publish_state()
             return launched
 
         def complete(fut) -> None:
@@ -1079,6 +1122,7 @@ class PlanExecutor:
                         batched=len(info.supernodes),
                         t_ready=t_ready[s],
                         t_submit=info.t_submit,
+                        device0=g.offset if g is not None else 0,
                     )
                 )
                 # the completion event: the parent becomes ready the
@@ -1090,6 +1134,7 @@ class PlanExecutor:
                         t_ready[p] = t1
                         ready.append(p)
             n_done += len(info.supernodes)
+            publish_state()
 
         workers = self.max_workers or max(2, ndev)
         pool = ThreadPoolExecutor(max_workers=workers)
@@ -1325,6 +1370,7 @@ class PlanExecutor:
                             t_end=t1,
                             flops=symb.supernodes[s].flops,
                             batched=len(self._groups[gid]),
+                            device0=g.offset if g else 0,
                         )
                     )
 
@@ -1406,6 +1452,42 @@ class PlanExecutor:
                 )
             )
 
+        def publish_state() -> None:
+            if not obs_events.enabled():
+                return
+            t = now()
+            bus = obs_events.BUS
+            bus.point("queue_depth", len(ready), t=t)
+            bus.point(
+                "resident_bytes",
+                self._mem_panels + self._mem_updates + mem_inflight,
+                t=t,
+            )
+            reg = obs_metrics.REGISTRY
+            reg.gauge(
+                "repro_queue_depth",
+                "ready fronts awaiting dispatch",
+                unit="fronts",
+                track=True,
+            ).set(len(ready), t=t)
+            reg.gauge(
+                "repro_resident_bytes",
+                "live host buffers (panels + CBs + in-flight)",
+                unit="bytes",
+                track=True,
+            ).set(
+                self._mem_panels + self._mem_updates + mem_inflight, t=t
+            )
+            reg.gauge(
+                "repro_buddy_free_devices",
+                "free devices in the buddy allocator",
+                unit="devices",
+            ).set(alloc.n_free, t=t)
+            reg.gauge(
+                "repro_buddy_fragmentation",
+                "1 - largest free run / free devices",
+            ).set(alloc.fragmentation, t=t)
+
         def launch_ready(pool) -> int:
             nonlocal mem_inflight, mem_peak, n_disp, seq
             launched = 0
@@ -1444,6 +1526,7 @@ class PlanExecutor:
                 seq += 1
                 n_disp += 1
                 launched += 1
+                publish_state()
             return launched
 
         def complete(fut) -> None:
@@ -1477,6 +1560,7 @@ class PlanExecutor:
                         batched=len(self._groups[gid]),
                         t_ready=t_ready[gid],
                         t_submit=t_sub,
+                        device0=g_alloc.offset,
                     )
                 )
             pg = self._group_parent[gid]
@@ -1486,6 +1570,7 @@ class PlanExecutor:
                     t_ready[pg] = t1
                     ready.append(pg)
             n_done += 1
+            publish_state()
 
         workers = self.max_workers or max(2, ndev)
         pool = ThreadPoolExecutor(max_workers=workers)
@@ -1523,6 +1608,85 @@ class PlanExecutor:
             trace, n_disp, mem_peak, projected_peak, "async"
         )
         return Factorization(symb=symb, panels=panels), report  # type: ignore[arg-type]
+
+
+BATCH_WIDTH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def _publish_report_obs(report: ExecutionReport) -> None:
+    """Publish a finished run's trace to the obs bus and registry.
+
+    Spans are pre-timed from the TraceEvent record (seconds since run
+    start, wall clock): a ``run`` phase per front on its device lane,
+    plus ``ready`` / ``submit`` phases when the async runner recorded
+    them.  Aggregates land in the metric registry under the
+    ``repro_*`` names cataloged in docs/OBSERVABILITY.md.
+    """
+    bus = obs_events.BUS
+    reg = obs_metrics.REGISTRY
+    for e in report.trace:
+        dev = max(e.device0, 0)
+        if not math.isnan(e.t_ready) and e.t_submit > e.t_ready:
+            bus.span(
+                "ready", e.t_ready, e.t_submit, cat="front", key=e.front,
+                device=dev,
+            )
+        if not math.isnan(e.t_submit) and e.t_start > e.t_submit:
+            bus.span(
+                "submit", e.t_submit, e.t_start, cat="front", key=e.front,
+                device=dev,
+            )
+        bus.span(
+            "run", e.t_start, e.t_end, cat="front", key=e.front, device=dev,
+            devices_used=e.devices_used,
+            dispatch_devices=e.dispatch_devices,
+            devices_planned=e.devices,
+            batched=e.batched,
+            flops=e.flops,
+            wave=e.wave,
+            mode=report.mode,
+        )
+    reg.counter(
+        "repro_dispatches_total", "kernel dispatches issued"
+    ).inc(report.n_dispatches)
+    reg.counter(
+        "repro_fronts_completed_total", "fronts factored"
+    ).inc(len(report.trace))
+    ready_h = reg.histogram(
+        "repro_ready_latency_seconds",
+        "front ready -> dispatch start",
+        unit="s",
+    )
+    disp_h = reg.histogram(
+        "repro_dispatch_latency_seconds",
+        "dispatch submit -> start (worker-pool queueing)",
+        unit="s",
+    )
+    for e in report.trace:
+        if not math.isnan(e.t_ready):
+            ready_h.observe(e.ready_latency)
+        if not math.isnan(e.t_submit):
+            disp_h.observe(e.dispatch_latency)
+    width_h = reg.histogram(
+        "repro_batch_width",
+        "fronts coalesced per dispatch",
+        unit="fronts",
+        buckets=BATCH_WIDTH_BUCKETS,
+    )
+    for batched in {
+        (e.t_start, e.t_end): e.batched for e in report.trace
+    }.values():
+        width_h.observe(batched)
+    reg.gauge(
+        "repro_peak_resident_bytes",
+        "measured peak of real host buffers",
+        unit="bytes",
+    ).set(report.measured_peak_bytes)
+    reg.gauge(
+        "repro_projected_peak_bytes",
+        "plan-projected peak resident bytes",
+        unit="bytes",
+    ).set(report.projected_peak_bytes)
 
 
 def execute_plan(

@@ -99,7 +99,7 @@ def serve_online(
         )
         for i, (r, L, a) in enumerate(zip(requests, lengths, arrivals))
     ]
-    return serve_trees(
+    report = serve_trees(
         reqs,
         pod_devices,
         alpha,
@@ -108,6 +108,19 @@ def serve_online(
         max_concurrent=max_concurrent,
         noise=noise,
     )
+    from repro.obs import events as obs_events
+    from repro.obs import metrics as obs_metrics
+
+    if obs_events.enabled():
+        obs_metrics.REGISTRY.counter(
+            "repro_serve_requests_total", "pod requests served"
+        ).inc(len(reqs))
+        obs_metrics.REGISTRY.gauge(
+            "repro_serve_mean_latency",
+            "mean request latency of the last serve batch (virtual s)",
+            unit="s",
+        ).set(report.mean_latency())
+    return report
 
 
 def place_two_pods(

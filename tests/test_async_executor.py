@@ -232,7 +232,9 @@ def test_session_execute_mode():
     np.testing.assert_array_equal(
         rep_w.artifact.to_dense_l(), rep_a.artifact.to_dense_l()
     )
-    assert math.isnan(rep_w.metrics["mean_ready_latency_s"])
+    # no ready-latency samples under waves: the key is absent (metrics
+    # never carry None/NaN — the obs layer's null-free contract)
+    assert "mean_ready_latency_s" not in rep_w.metrics
     assert rep_a.metrics["mean_ready_latency_s"] >= 0.0
 
 
