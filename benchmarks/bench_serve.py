@@ -1,0 +1,177 @@
+"""Serving-cluster benchmark: sustained QPS and latency under load.
+
+A Poisson request stream from three tenants hits a live inproc cluster
+(one long-lived :class:`~repro.cluster.scheduler.ClusterScheduler`, two
+heartbeating workers) in *wall-clock* time — threads, queues and the
+comm layer are all real; only the task work is simulated (sim-mode
+dispatches sleep their Lemma-4 duration).  Two configurations, same
+seed, same stream:
+
+1. *batching on* — same-shape ready fronts from different tenants ride
+   one dispatch (cross-tenant continuous batching);
+2. *batching off* — one ready front per dispatch.
+
+With a per-dispatch overhead (the knob that models kernel launch +
+transfer cost a vmapped batch amortizes), batching must win: the
+``batching_speedup`` summary is mean-latency(off) / mean-latency(on)
+and CI gates it at ≥ 1 (``benchmarks/baselines/serve.json``).  The
+gate also requires every request to complete and the cluster to shut
+down clean — no leaked ``repro-`` threads.
+
+``python -m benchmarks.bench_serve [--smoke] [--outdir DIR]`` writes the
+uniform ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.api.problem import Problem
+from repro.cluster import LocalCluster, leaked_threads
+from repro.online import poisson_arrivals
+
+ALPHA = 0.9
+N_WORKERS = 2
+SLOTS_PER_WORKER = 2
+N_TENANTS = 3
+RATE_QPS = 40.0  # Poisson arrival rate of the submitted stream
+WORK_RATE = 200.0  # sim work units per wall second
+DISPATCH_OVERHEAD_S = 0.005  # per-dispatch cost a batch amortizes
+SEED = 11
+CONFIG = {
+    "alpha": ALPHA,
+    "n_workers": N_WORKERS,
+    "slots_per_worker": SLOTS_PER_WORKER,
+    "n_tenants": N_TENANTS,
+    "rate_qps": RATE_QPS,
+    "work_rate": WORK_RATE,
+    "dispatch_overhead_s": DISPATCH_OVERHEAD_S,
+}
+
+
+def _stream(n_requests: int, tasks: int, seed: int):
+    rng = np.random.default_rng(seed)
+    arrivals = poisson_arrivals(n_requests, 1.0 / RATE_QPS, seed)
+    return [
+        (
+            Problem.from_lengths(rng.uniform(0.5, 1.5, size=tasks), ALPHA),
+            float(a),
+            i % N_TENANTS,
+        )
+        for i, (a,) in enumerate(zip(arrivals))
+    ]
+
+
+def _serve(stream, *, batching: bool) -> Dict:
+    """Run one configuration; returns summary stats for the run."""
+    with LocalCluster(
+        n_workers=N_WORKERS,
+        slots_per_worker=SLOTS_PER_WORKER,
+        batching=batching,
+        work_rate=WORK_RATE,
+        dispatch_overhead_s=DISPATCH_OVERHEAD_S,
+        tick=0.002,
+        heartbeat_interval=0.05,
+        heartbeat_timeout=5.0,
+    ) as cl:
+        client = cl.client()
+        t0 = time.perf_counter()
+        futs = []
+        for i, (problem, arrival, tenant) in enumerate(stream):
+            # Pace submissions to the Poisson arrival times (wall clock).
+            lag = arrival - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            futs.append(client.submit(problem, tenant=tenant, rid=i))
+        results = client.gather(futs, timeout=300.0)
+        elapsed = time.perf_counter() - t0
+        stats = cl.scheduler.stats()
+        cl.drain()
+    lat = np.array([r.latency for r in results if r.ok], dtype=np.float64)
+    return {
+        "elapsed_s": elapsed,
+        "n_ok": int(sum(r.ok for r in results)),
+        "n_requests": len(stream),
+        "qps": len(lat) / elapsed if elapsed > 0 else 0.0,
+        "p50_latency_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+        "p99_latency_s": float(np.percentile(lat, 99)) if len(lat) else 0.0,
+        "mean_latency_s": float(lat.mean()) if len(lat) else 0.0,
+        "n_dispatches": stats["n_dispatches"],
+        "n_reshares": stats["n_reshares"],
+        "clean_shutdown": leaked_threads() == [],
+    }
+
+
+def run(smoke: bool = False) -> Tuple[List[Dict], Dict]:
+    n_requests, tasks = (12, 3) if smoke else (36, 4)
+    stream = _stream(n_requests, tasks, SEED)
+
+    rows: List[Dict] = []
+    modes: Dict[str, Dict] = {}
+    for label, batching in (("batched", True), ("unbatched", False)):
+        s = _serve(stream, batching=batching)
+        modes[label] = s
+        rows.append(
+            {
+                "name": f"serve_{label}",
+                "us_per_call": s["elapsed_s"] * 1e6 / max(s["n_ok"], 1),
+                "derived": (
+                    f"qps={s['qps']:.1f} p50={s['p50_latency_s'] * 1e3:.1f}ms "
+                    f"p99={s['p99_latency_s'] * 1e3:.1f}ms "
+                    f"dispatches={s['n_dispatches']}"
+                ),
+            }
+        )
+
+    on, off = modes["batched"], modes["unbatched"]
+    payload = {
+        "n_requests": n_requests,
+        "n_tenants": N_TENANTS,
+        "qps": on["qps"],
+        "p50_latency_s": on["p50_latency_s"],
+        "p99_latency_s": on["p99_latency_s"],
+        "mean_latency_s": on["mean_latency_s"],
+        "n_dispatches_batched": on["n_dispatches"],
+        "n_dispatches_unbatched": off["n_dispatches"],
+        # Batching amortizes per-dispatch overhead: fewer dispatches,
+        # lower mean latency.  Gate: ≥ 1.
+        "batching_speedup": (
+            off["mean_latency_s"] / on["mean_latency_s"]
+            if on["mean_latency_s"] > 0
+            else 0.0
+        ),
+        "dispatch_reduction": (
+            off["n_dispatches"] / on["n_dispatches"]
+            if on["n_dispatches"]
+            else 0.0
+        ),
+        "all_completed": (
+            on["n_ok"] == n_requests and off["n_ok"] == n_requests
+        ),
+        "clean_shutdown": on["clean_shutdown"] and off["clean_shutdown"],
+    }
+    return rows, payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.run import write_bench_json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--outdir", default=".")
+    args = ap.parse_args()
+    rows, payload = run(smoke=args.smoke)
+    write_bench_json(
+        "serve",
+        rows,
+        config=CONFIG,
+        seed=SEED,
+        summary=payload,
+        outdir=args.outdir,
+    )
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

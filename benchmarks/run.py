@@ -53,6 +53,7 @@ REGISTRY: Tuple[BenchSpec, ...] = (
     BenchSpec("memory", "memory-bounded: pm vs pm-bounded budget sweep (arXiv:1210.2580)", "benchmarks.bench_memory", smoke_aware=True),
     BenchSpec("amalgamate", "tree amalgamation: threshold Pareto, many-small-fronts", "benchmarks.bench_amalgamate", smoke_aware=True),
     BenchSpec("obs", "telemetry: fluid-ratio fidelity, zero-overhead disable, span hygiene", "benchmarks.bench_obs", smoke_aware=True),
+    BenchSpec("serve", "serving cluster: QPS/latency under Poisson load, cross-tenant batching A/B", "benchmarks.bench_serve", smoke_aware=True),
 )
 
 

@@ -47,13 +47,31 @@ _FACADE = frozenset(
 )
 
 
+# Cluster names resolve lazily too (repro.LocalCluster starts nothing
+# at import time; the subsystem loads on first touch).
+_CLUSTER_FACADE = frozenset(
+    {
+        "ClusterClient",
+        "ClusterEngine",
+        "ClusterScheduler",
+        "LocalCluster",
+        "SimEngine",
+        "Worker",
+    }
+)
+
+
 def __getattr__(name: str):
     if name in _FACADE:
         from repro import api
 
         return getattr(api, name)
+    if name in _CLUSTER_FACADE:
+        from repro import cluster
+
+        return getattr(cluster, name)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(set(globals()) | _FACADE)
+    return sorted(set(globals()) | _FACADE | _CLUSTER_FACADE)

@@ -32,7 +32,7 @@ import numpy as np
 from .platform import Platform, as_platform
 from .policy import accepts_memory_budget, get_policy
 from .problem import Problem, as_problem
-from .schedule import RunReport, Schedule
+from .schedule import RunReport, Schedule, ShareEntry
 
 
 def _clean_metrics(metrics: dict) -> dict:
@@ -370,6 +370,8 @@ class Session:
         alpha: Optional[float] = None,
         memory_budget: Optional[float] = None,
         dashboard_port: Optional[int] = None,
+        cluster=None,
+        time_scale: float = 0.0,
     ) -> RunReport:
         """Serve a stream of tree requests on this platform.
 
@@ -384,17 +386,33 @@ class Session:
         peaks (delayed otherwise), and a tree that can never fit is
         refused at submission.
 
+        ``cluster`` switches the backend from the in-process
+        virtual-time engine to a scheduler/worker cluster
+        (:mod:`repro.cluster`): pass a worker count (an inproc
+        :class:`~repro.cluster.service.LocalCluster` is started and
+        torn down around the call) or a running ``LocalCluster`` (left
+        running).  On a cluster, latencies are wall-clock and numeric
+        problems return real factorizations in
+        ``report.artifact[rid]``; ``time_scale`` > 0 paces submissions
+        at ``arrival × time_scale`` wall seconds (0 = submit
+        immediately in arrival order).
+
         ``dashboard_port`` starts the live observability dashboard
         (``repro.obs.dashboard.Dashboard``) on that port (0 = auto) for
         the duration of the serve loop and leaves it running on
         ``self.dashboard`` afterwards — browse ``self.dashboard.url``,
-        stop it with ``self.dashboard.stop()``.
+        stop it with ``self.dashboard.stop()``.  A dashboard left over
+        from an earlier ``serve`` call is shut down first, so repeated
+        serves never collide on a port; ``Session.close()`` (or using
+        the session as a context manager) stops it deterministically.
         """
         from repro.online.queue import TreeRequest, serve_trees
 
         if dashboard_port is not None:
             from repro.obs.dashboard import Dashboard
 
+            if self.dashboard is not None:  # no port squatting across serves
+                self.dashboard.stop()
             self.dashboard = Dashboard(
                 dashboard_port,
                 context={"subtitle": f"serving on {self.platform.describe()}"},
@@ -434,6 +452,17 @@ class Session:
                 TreeRequest(
                     tree=prob, arrival=arrival, tenant=tenant, rid=len(reqs)
                 )
+            )
+        if cluster is not None:
+            return self._serve_cluster(
+                reqs,
+                cluster,
+                alpha=alpha,
+                policy=policy,
+                admission=admission,
+                max_concurrent=max_concurrent,
+                memory_budget=memory_budget,
+                time_scale=time_scale,
             )
         report = serve_trees(
             reqs,
@@ -481,6 +510,170 @@ class Session:
         return run
 
     # ------------------------------------------------------------------
+    def _serve_cluster(
+        self,
+        reqs,
+        cluster,
+        *,
+        alpha: float,
+        policy: str,
+        admission: str,
+        max_concurrent,
+        memory_budget,
+        time_scale: float,
+    ) -> RunReport:
+        """Serve the request list on a scheduler/worker cluster."""
+        import math as _math
+        import time as _time
+
+        from repro.cluster.engine import ClusterEngine
+        from repro.cluster.service import LocalCluster
+
+        own = False
+        if isinstance(cluster, int):
+            pool = max(int(round(self.platform.capacity())), 1)
+            n_workers = max(cluster, 1)
+            cluster = LocalCluster(
+                n_workers,
+                slots_per_worker=max(1, round(pool / n_workers)),
+                alpha=alpha,
+                policy=policy if policy in ("pm", "proportional") else "pm",
+                admission=admission,
+                max_concurrent=max_concurrent,
+                memory_capacity=self._memory_capacity(memory_budget),
+            )
+            own = True
+        elif not isinstance(cluster, LocalCluster):
+            raise TypeError(
+                "cluster= takes a worker count or a LocalCluster, got "
+                f"{type(cluster).__name__}"
+            )
+        engine = ClusterEngine(cluster, own=own, label="session")
+        try:
+            t0 = _time.perf_counter()
+            for req in sorted(reqs, key=lambda r: r.arrival):
+                if time_scale > 0:
+                    lag = req.arrival * time_scale - (
+                        _time.perf_counter() - t0
+                    )
+                    if lag > 0:
+                        _time.sleep(lag)
+                engine.submit(
+                    req.tree, tenant=req.tenant, rid=req.rid, alpha=alpha
+                )
+            results = engine.drain(timeout=max(60.0, 10.0 * len(reqs)))
+            stats = engine.stats()
+            sched_stats = engine.scheduler_stats()
+        finally:
+            engine.close()
+
+        entries, offset = [], 0
+        artifacts = {}
+        t_min = min(
+            (r.t_submit for r in results if r.ok), default=0.0
+        )
+        for res in sorted(results, key=lambda r: (r.tenant, r.rid or 0)):
+            if not res.ok:
+                continue
+            for span in res.spans:
+                if span["end"] > span["start"]:
+                    entries.append(
+                        ShareEntry(
+                            task=offset + int(span["task"]),
+                            label=int(span["task"]),
+                            start=span["start"] - t_min,
+                            end=span["end"] - t_min,
+                            share=float(span["slots"]),
+                        )
+                    )
+            offset += len(res.spans)
+            if res.factor is not None:
+                artifacts[res.rid] = res.factor
+        capacity = float(sched_stats.get("total_slots") or 0.0)
+        # Theorem-6 fluid bound of the served forest in wall seconds
+        # (simulated work only: work_rate converts units to seconds;
+        # numeric trees have no calibrated rate, so the bound is omitted)
+        fluid = 0.0
+        if not artifacts and capacity > 0:
+            inv = 1.0 / alpha
+            eq_total = (
+                sum(r.tree.eq_root ** inv for r in reqs) ** alpha
+            )
+            fluid = eq_total / (
+                capacity ** alpha * cluster.scheduler.work_rate
+            )
+        realized = Schedule(
+            alpha=alpha,
+            policy=f"cluster-{policy}",
+            platform=f"cluster({cluster.address})",
+            capacity=capacity,
+            entries=entries,
+            makespan=stats.makespan,
+            fluid_makespan=fluid,
+            discretized=True,
+            meta={
+                "backend": "cluster",
+                "n_workers": len(cluster.workers),
+                "admission": admission,
+            },
+        )
+        run = RunReport(
+            kind="served",
+            schedule=realized,
+            makespan=stats.makespan,
+            fluid_makespan=fluid if fluid > 0 else None,
+            planned=self.schedule,
+            metrics=_clean_metrics(
+                {
+                    "n_requests": float(stats.n_requests),
+                    "n_failed": float(stats.n_failed),
+                    "qps": stats.qps,
+                    "p50_latency": stats.p50_latency,
+                    "p99_latency": stats.p99_latency,
+                    "mean_latency": stats.mean_latency,
+                    "mean_wait": stats.mean_wait,
+                    "mean_exec": stats.mean_exec,
+                    "n_dispatches": float(
+                        sched_stats.get("n_dispatches", 0)
+                    ),
+                    "n_reshares": float(sched_stats.get("n_reshares", 0)),
+                    "fluid_ratio": (
+                        stats.makespan / fluid
+                        if fluid > 0 and _math.isfinite(fluid)
+                        else None
+                    ),
+                }
+            ),
+            detail={"stats": stats, "scheduler": sched_stats,
+                    "results": results},
+            artifact=artifacts or None,
+        )
+        dash = getattr(self, "dashboard", None)
+        if dash is not None:
+            dash.update_context(
+                makespan=run.makespan,
+                subtitle=f"cluster-served {stats.n_requests} trees @ "
+                f"{cluster.address}",
+            )
+        return run
+
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        """Release session-owned services (the live dashboard, for now).
+
+        Idempotent; after close a later ``serve(dashboard_port=)`` may
+        start a fresh dashboard.
+        """
+        if self.dashboard is not None:
+            self.dashboard.stop()
+            self.dashboard = None
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def __repr__(self) -> str:
         prob = self.problem.name if self.problem else None
         pol = self.schedule.policy if self.schedule else None

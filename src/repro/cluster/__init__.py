@@ -1,0 +1,58 @@
+"""Persistent serving cluster: scheduler/worker split over pluggable comm.
+
+The distributed half of the serving story (the in-process half lives in
+:mod:`repro.online` and :mod:`repro.serve`):
+
+* :mod:`repro.cluster.comm` — inproc/TCP message layer, one protocol;
+* :mod:`repro.cluster.scheduler` — long-lived scheduler: admission,
+  Lemma-4 re-share on every cluster event, cross-tenant continuous
+  batching, heartbeat failure detector → Theorem-6 capacity events;
+* :mod:`repro.cluster.worker` — slot-registering, heartbeating workers
+  executing vmapped front groups;
+* :mod:`repro.cluster.engine` — the JetStream-style engine facade over
+  both the virtual-time and the cluster backend;
+* :mod:`repro.cluster.service` — :class:`LocalCluster` lifecycle.
+"""
+from repro.cluster.comm import (
+    Comm,
+    CommClosedError,
+    CommError,
+    FaultInjector,
+    RetryPolicy,
+    connect,
+    decode,
+    encode,
+    listen,
+)
+from repro.cluster.engine import ClusterEngine, EngineStats, SimEngine
+from repro.cluster.scheduler import (
+    ClusterClient,
+    ClusterFuture,
+    ClusterScheduler,
+    TreeResult,
+)
+from repro.cluster.service import LocalCluster, leaked_threads, open_socket_count
+from repro.cluster.worker import Worker
+
+__all__ = [
+    "ClusterClient",
+    "ClusterEngine",
+    "ClusterFuture",
+    "ClusterScheduler",
+    "Comm",
+    "CommClosedError",
+    "CommError",
+    "EngineStats",
+    "FaultInjector",
+    "LocalCluster",
+    "RetryPolicy",
+    "SimEngine",
+    "TreeResult",
+    "Worker",
+    "connect",
+    "decode",
+    "encode",
+    "leaked_threads",
+    "listen",
+    "open_socket_count",
+]

@@ -227,6 +227,27 @@ def render_html(
     lat = registry.get("repro_ready_latency_seconds")
     if lat is not None and getattr(lat, "count", 0):
         tiles.append(_tile("ready lat p50 (s)", _fmt(lat.quantile(0.5))))
+    wait_h = registry.get("repro_serve_wait_seconds")
+    if wait_h is not None and getattr(wait_h, "count", 0):
+        tiles.append(
+            _tile(
+                "serve wait p50 (s)",
+                _fmt(wait_h.quantile(0.5)),
+                "admission wait: request submit -> admit",
+            )
+        )
+    exec_h = registry.get("repro_serve_exec_seconds")
+    if exec_h is not None and getattr(exec_h, "count", 0):
+        tiles.append(
+            _tile(
+                "serve exec p50 (s)",
+                _fmt(exec_h.quantile(0.5)),
+                "execution time: request admit -> done",
+            )
+        )
+    slots = registry.get("repro_cluster_slots")
+    if slots is not None and slots.value:
+        tiles.append(_tile("cluster slots", _fmt(slots.value)))
 
     n_devices = int(ctx.get("n_devices", 0))
     if not n_devices:
@@ -277,6 +298,33 @@ def render_html(
         else '<div class="empty">no metrics registered</div>'
     )
 
+    tenants_html = ""
+    if wait_h is not None and getattr(wait_h, "count", 0):
+        rows = []
+        waits = wait_h.children()
+        execs = exec_h.children() if exec_h is not None else {}
+        for label in sorted(waits):
+            wh, eh = waits[label], execs.get(label)
+            rows.append(
+                f"<tr><td>{html.escape(label.strip('{}'))}</td>"
+                f"<td class='num'>{wh.count}</td>"
+                f"<td class='num'>{_fmt(wh.quantile(0.5))}</td>"
+                f"<td class='num'>"
+                f"{_fmt(eh.quantile(0.5)) if eh else '–'}</td>"
+                f"<td class='num'>"
+                f"{_fmt(eh.quantile(0.99)) if eh else '–'}</td></tr>"
+            )
+        if rows:
+            tenants_html = (
+                '<div class="panel"><h2>Serving by tenant '
+                "(wait = queued, exec = running)</h2>"
+                "<table><tr><th>tenant</th><th>served</th>"
+                "<th>wait p50 (s)</th><th>exec p50 (s)</th>"
+                "<th>exec p99 (s)</th></tr>"
+                + "".join(rows)
+                + "</table></div>"
+            )
+
     refresh_tag = (
         f'<meta http-equiv="refresh" content="{refresh:g}">' if refresh else ""
     )
@@ -290,7 +338,7 @@ def render_html(
 <div class="cards">{''.join(tiles)}</div>
 <div class="panel"><h2>Device utilization</h2>{util_html}</div>
 <div class="panel"><h2>Queue depth</h2>{_sparkline(qd)}</div>
-<div class="panel"><h2>Recent work (Gantt tail)</h2>
+{tenants_html}<div class="panel"><h2>Recent work (Gantt tail)</h2>
 {_gantt_tail(spans, ctx.get("makespan") or 0.0)}</div>
 <div class="panel"><h2>Metrics</h2>{metrics_html}</div>
 </body></html>"""

@@ -183,13 +183,27 @@ class Histogram(_Metric):
         self.counts = [0] * (len(self.buckets) + 1)  # +inf bucket
         self.sum = 0.0
         self.count = 0
+        self._children: Dict[Tuple[Tuple[str, str], ...], "Histogram"] = {}
 
-    def observe(self, v: float) -> None:
+    def observe(self, v: float, **labels) -> None:
+        """Record ``v`` in the aggregate; with labels, also in the
+        per-label child distribution (Prometheus-style children, so
+        per-tenant quantiles are first-class: ``h.child(tenant=3)``)."""
         if not _ENABLED[0]:
             return
         v = float(v)
         if math.isnan(v):
             return
+        if labels:
+            key = _label_key(labels)
+            with self._lock:
+                child = self._children.get(key)
+                if child is None:
+                    child = Histogram(
+                        self.name, self.help, self.unit, self.buckets
+                    )
+                    self._children[key] = child
+            child.observe(v)
         with self._lock:
             self.sum += v
             self.count += 1
@@ -198,6 +212,14 @@ class Histogram(_Metric):
                     self.counts[i] += 1
                     return
             self.counts[-1] += 1
+
+    def child(self, **labels) -> Optional["Histogram"]:
+        """The per-label child distribution, or None if never observed."""
+        return self._children.get(_label_key(labels))
+
+    def children(self) -> Dict[str, "Histogram"]:
+        """Rendered-label → child histogram (for tables/exporters)."""
+        return {_fmt_labels(k): h for k, h in sorted(self._children.items())}
 
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
@@ -228,6 +250,21 @@ class Histogram(_Metric):
                     ("+inf" if i == len(self.buckets) else f"{self.buckets[i]:g}"): c
                     for i, c in enumerate(self.counts)
                 },
+                **(
+                    {
+                        "children": {
+                            _fmt_labels(k): {
+                                "count": h.count,
+                                "mean": h.mean(),
+                                "p50": h.quantile(0.5),
+                                "p99": h.quantile(0.99),
+                            }
+                            for k, h in sorted(self._children.items())
+                        }
+                    }
+                    if self._children
+                    else {}
+                ),
             }
 
     def prometheus(self) -> List[str]:
@@ -241,7 +278,12 @@ class Histogram(_Metric):
             lines.append(f'{self.name}_bucket{{le="+Inf"}} {acc}')
             lines.append(f"{self.name}_sum {self.sum:g}")
             lines.append(f"{self.name}_count {self.count}")
-            return lines
+            children = sorted(self._children.items())
+        for key, child in children:
+            labels = _fmt_labels(key)[1:-1]  # strip the braces, re-merge
+            lines.append(f"{self.name}_sum{{{labels}}} {child.sum:g}")
+            lines.append(f"{self.name}_count{{{labels}}} {child.count}")
+        return lines
 
 
 class Registry:

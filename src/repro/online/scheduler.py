@@ -65,6 +65,7 @@ from .state import (
     DONE,
     READY,
     RUNNING,
+    RequestRecord,
     TreeFuture,
     TreeRun,
     combined_tree,
@@ -150,6 +151,21 @@ class OnlineReport:
             f.service for f in self.futures.values() if f.state == "done"
         ]
         return float(np.mean(svc)) if svc else 0.0
+
+    def request_results(self) -> List[RequestRecord]:
+        """Per-request records with the latency *split*: admission wait
+        (submit → admit) vs execution time (admit → done), one per
+        completed tree in submission order."""
+        return [
+            RequestRecord.of_future(f)
+            for _, f in sorted(self.futures.items())
+            if f.state == "done"
+        ]
+
+    def mean_wait(self) -> float:
+        """Mean admission wait (submit → admit) over completed trees."""
+        waits = [r.wait for r in self.request_results()]
+        return float(np.mean(waits)) if waits else 0.0
 
     def task_records(self, tree_id: int) -> List[Tuple[int, float, float, float]]:
         """[(task, t_start, t_done, mean_share)] of one tree — the replay

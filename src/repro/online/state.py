@@ -96,6 +96,45 @@ class TreeFuture:
         return self.t_done - self.t_admit
 
 
+@dataclass
+class RequestRecord:
+    """Per-request timing split of one served tree.
+
+    ``latency`` (submit → done) decomposes into admission ``wait``
+    (submit → admit, time spent queued) and ``exec_time`` (admit →
+    done, the tree's online makespan).  Both halves are first-class:
+    the serving layers (pod scheduler and cluster scheduler) publish
+    them as separate histograms so a saturated admission queue is
+    distinguishable from slow execution.
+    """
+
+    rid: Optional[int]
+    tenant: int
+    tree_id: int
+    t_submit: float
+    t_admit: float
+    t_done: float
+
+    @property
+    def wait(self) -> float:
+        return self.t_admit - self.t_submit
+
+    @property
+    def exec_time(self) -> float:
+        return self.t_done - self.t_admit
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+    @classmethod
+    def of_future(cls, f: TreeFuture) -> "RequestRecord":
+        return cls(
+            rid=f.rid, tenant=f.tenant, tree_id=f.tree_id,
+            t_submit=f.t_submit, t_admit=f.t_admit, t_done=f.t_done,
+        )
+
+
 class TreeRun:
     """State machine of one tree: transitions, residuals, realized work."""
 
@@ -248,6 +287,7 @@ __all__ = [
     "RUNNING",
     "WAITING",
     "OnlineFailure",
+    "RequestRecord",
     "TaskState",
     "TreeFuture",
     "TreeRun",

@@ -27,7 +27,7 @@ from repro.core.hetero import hetero_fptas, partition_makespan
 from repro.core.trees import star_tree
 from repro.core.two_node import homogeneous_two_node
 from repro.models.config import ModelConfig
-from repro.online.queue import TreeRequest, serve_trees
+from repro.online.queue import TreeRequest, serve_trees  # noqa: F401 (re-export)
 
 
 @dataclass
@@ -86,21 +86,22 @@ def serve_online(
     Each request becomes one shared :class:`repro.api.problem.Problem`
     with the pod's α, so the 𝓛 that SJF admission sorts by and the
     length the event loop pays down come from the same object.
+
+    This is the inproc backend of the cluster engine API
+    (:class:`repro.cluster.engine.SimEngine`): the same
+    submit/run/stats verbs the distributed
+    :class:`~repro.cluster.engine.ClusterEngine` speaks, in virtual
+    time.  Per-request results carry the **latency split** — admission
+    wait (submit → admit) vs execution time (admit → done), see
+    ``report.request_results()`` — published as separate
+    ``repro_serve_wait_seconds`` / ``repro_serve_exec_seconds``
+    histograms so a saturated queue and slow execution are
+    distinguishable on the dashboard.
     """
     from repro.api.problem import Problem
+    from repro.cluster.engine import SimEngine
 
-    lengths = request_lengths(cfg, requests) / float(flop_rate)
-    reqs = [
-        TreeRequest(
-            tree=Problem.from_lengths([L], alpha, name=f"request-{r.rid}"),
-            arrival=float(a),
-            tenant=int(tenants[i]) if tenants is not None else 0,
-            rid=r.rid,
-        )
-        for i, (r, L, a) in enumerate(zip(requests, lengths, arrivals))
-    ]
-    report = serve_trees(
-        reqs,
+    engine = SimEngine(
         pod_devices,
         alpha,
         policy=policy,
@@ -108,18 +109,46 @@ def serve_online(
         max_concurrent=max_concurrent,
         noise=noise,
     )
+    lengths = request_lengths(cfg, requests) / float(flop_rate)
+    for i, (r, L, a) in enumerate(zip(requests, lengths, arrivals)):
+        engine.submit(
+            Problem.from_lengths([L], alpha, name=f"request-{r.rid}"),
+            arrival=float(a),
+            tenant=int(tenants[i]) if tenants is not None else 0,
+            rid=r.rid,
+        )
+    report = engine.run()
     from repro.obs import events as obs_events
     from repro.obs import metrics as obs_metrics
 
     if obs_events.enabled():
-        obs_metrics.REGISTRY.counter(
-            "repro_serve_requests_total", "pod requests served"
-        ).inc(len(reqs))
+        req_counter = obs_metrics.REGISTRY.counter(
+            "repro_serve_requests_total", "pod requests served, by tenant"
+        )
+        wait_h = obs_metrics.REGISTRY.histogram(
+            "repro_serve_wait_seconds",
+            "admission wait (submit -> admit), virtual s",
+            unit="s",
+        )
+        exec_h = obs_metrics.REGISTRY.histogram(
+            "repro_serve_exec_seconds",
+            "execution time (admit -> done), virtual s",
+            unit="s",
+        )
+        for rec in report.request_results():
+            req_counter.inc(tenant=rec.tenant)
+            wait_h.observe(rec.wait, tenant=rec.tenant)
+            exec_h.observe(rec.exec_time, tenant=rec.tenant)
         obs_metrics.REGISTRY.gauge(
             "repro_serve_mean_latency",
             "mean request latency of the last serve batch (virtual s)",
             unit="s",
         ).set(report.mean_latency())
+        obs_metrics.REGISTRY.gauge(
+            "repro_serve_mean_wait",
+            "mean admission wait of the last serve batch (virtual s)",
+            unit="s",
+        ).set(report.mean_wait())
     return report
 
 
