@@ -1,0 +1,144 @@
+"""Zoo workloads through the scheduling stack: PM vs proportional vs online.
+
+Every model config in :data:`repro.configs.ARCHS` is compiled into its
+family-natural malleable task tree (MoE dispatch star / pipeline-stage
+chain, plus one multi-model serving pod) and planned under the paper's
+policies.  The gates mirror §7 on the new workload family: PM beats the
+speedup-unaware proportional mapping wherever the tree has parallelism
+(the MoE stars), never loses to it, and the zero-noise online loop
+reproduces the PM fluid optimum through the event core.
+
+The second section keeps the beyond-paper expert-placement study the old
+``bench_moe_pm`` ran: skewed router loads placed by the k-node PM greedy
+vs uniform round-robin, plus the two-pod FPTAS split.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import k_node_greedy, star_tree
+from repro.core.hetero import hetero_fptas
+
+SEED = 13
+CONFIG = {
+    "platform_p": 32,
+    "policies": ("pm", "proportional", "online"),
+    "pod": ("qwen3-4b", "rwkv6-1.6b", "granite-moe-3b-a800m"),
+    "placement": {"experts": 60, "nodes": 8, "alpha": 0.9},
+}
+
+_SMOKE_ARCHS = ("qwen2-moe-a2.7b", "granite-moe-3b-a800m", "qwen3-4b")
+
+
+def _zoo_problems(smoke: bool) -> List[Tuple[str, str, object]]:
+    """(label, kind, Problem) triples on the bench platform."""
+    from repro.api import SharedMemory
+    from repro.configs import ARCHS
+    from repro.workloads import default_workload, serving_pod
+
+    platform = SharedMemory(CONFIG["platform_p"])
+    names = _SMOKE_ARCHS if smoke else tuple(sorted(ARCHS))
+    out = []
+    for name in names:
+        wl = default_workload(ARCHS[name])
+        out.append((name, wl.kind, wl.problem(platform)))
+    pod = serving_pod(list(CONFIG["pod"]))
+    out.append(("pod3", pod.kind, pod.problem(platform)))
+    return out
+
+
+def _policy_section(smoke: bool) -> Tuple[List[Dict], Dict]:
+    from repro.api import Session, SharedMemory
+
+    rows: List[Dict] = []
+    ratios: Dict[str, Dict[str, float]] = {}
+    prop_over_pm: List[Tuple[str, str, float]] = []
+    online_err = 0.0
+    for label, kind, problem in _zoo_problems(smoke):
+        mks: Dict[str, float] = {}
+        for policy in CONFIG["policies"]:
+            sess = Session(SharedMemory(CONFIG["platform_p"])).load(problem)
+            t0 = time.perf_counter()
+            sess.plan(policy=policy)
+            us = (time.perf_counter() - t0) * 1e6
+            mks[policy] = sess.schedule.makespan
+            rows.append(
+                {
+                    "name": f"{label}_{policy}",
+                    "us_per_call": round(us, 1),
+                    "derived": f"kind={kind} makespan={mks[policy]:.6g}"
+                    f" n={problem.n}",
+                }
+            )
+        r_prop = mks["proportional"] / mks["pm"]
+        r_online = mks["online"] / mks["pm"]
+        ratios[label] = {
+            "kind": kind,
+            "prop_over_pm": r_prop,
+            "online_over_pm": r_online,
+        }
+        prop_over_pm.append((label, kind, r_prop))
+        online_err = max(online_err, abs(r_online - 1.0))
+
+    parallel = [r for _, k, r in prop_over_pm if k in ("moe", "pod")]
+    summary = {
+        "n_workloads": len(ratios),
+        "ratios": ratios,
+        # PM never loses to proportional, and strictly wins wherever the
+        # tree has sibling parallelism (MoE stars, pods)
+        "min_prop_over_pm": min(r for _, _, r in prop_over_pm),
+        "moe_min_prop_over_pm": min(parallel) if parallel else None,
+        "online_fidelity_max_err": online_err,
+    }
+    return rows, summary
+
+
+def _placement_section() -> Tuple[List[Dict], Dict]:
+    """The old bench_moe_pm study: PM-guided expert placement."""
+    cfg = CONFIG["placement"]
+    e, k_nodes, alpha = cfg["experts"], cfg["nodes"], cfg["alpha"]
+    rows: List[Dict] = []
+    gains: Dict[str, float] = {}
+    for skew in (0.0, 1.0, 2.0):
+        load = (np.arange(1, e + 1) ** (-skew)) if skew else np.ones(e)
+        load = load / load.sum()
+        lengths = load * 1e6
+
+        per_node = np.zeros(k_nodes)
+        for i, l in enumerate(lengths):
+            per_node[i % k_nodes] += l
+        uniform = per_node.max()
+
+        t0 = time.perf_counter()
+        res = k_node_greedy(star_tree(lengths), alpha, 1.0, k_nodes)
+        us = (time.perf_counter() - t0) * 1e6
+        pm = max(res.node_eq) if res.node_eq else res.makespan
+        res2 = hetero_fptas(lengths, 4.0, 4.0, alpha, lam=1.05)
+
+        gain = 100 * (uniform / pm - 1)
+        gains[f"skew{skew:g}"] = gain
+        rows.append(
+            {
+                "name": f"moe_pm_skew{skew}",
+                "us_per_call": round(us, 1),
+                "derived": f"uniform={uniform:.3g} pm={pm:.3g}"
+                f" gain={gain:.1f}% fptas_mk={res2.makespan:.3g}",
+            }
+        )
+    return rows, {"placement_gain_pct": gains}
+
+
+def run(smoke: bool = False) -> Tuple[List[Dict], Dict]:
+    rows, summary = _policy_section(smoke)
+    p_rows, p_summary = _placement_section()
+    rows.extend(p_rows)
+    summary.update(p_summary)
+    return rows, summary
+
+
+if __name__ == "__main__":
+    for r in run()[0]:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

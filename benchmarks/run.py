@@ -49,7 +49,7 @@ REGISTRY: Tuple[BenchSpec, ...] = (
     BenchSpec("kernel", "frontal Pallas", "benchmarks.bench_kernel"),
     BenchSpec("executor", "PM vs PROPORTIONAL, measured", "benchmarks.bench_executor"),
     BenchSpec("async", "futures vs wave barrier, straggler-injected A/B", "benchmarks.bench_async", smoke_aware=True),
-    BenchSpec("moe_pm", "beyond-paper", "benchmarks.bench_moe_pm"),
+    BenchSpec("workloads", "zoo trees: PM vs proportional vs online + expert placement", "benchmarks.bench_workloads", smoke_aware=True),
     BenchSpec("memory", "memory-bounded: pm vs pm-bounded budget sweep (arXiv:1210.2580)", "benchmarks.bench_memory", smoke_aware=True),
     BenchSpec("amalgamate", "tree amalgamation: threshold Pareto, many-small-fronts", "benchmarks.bench_amalgamate", smoke_aware=True),
     BenchSpec("obs", "telemetry: fluid-ratio fidelity, zero-overhead disable, span hygiene", "benchmarks.bench_obs", smoke_aware=True),

@@ -27,6 +27,7 @@ __version__ = "1.0.0"
 _FACADE = frozenset(
     {
         "DeviceMesh",
+        "MixedCluster",
         "MulticoreCluster",
         "Platform",
         "Policy",
@@ -61,6 +62,28 @@ _CLUSTER_FACADE = frozenset(
 )
 
 
+# Workload-frontend names (model zoo → malleable task trees).  Lazy for
+# the same reason, and doubly so: resolving one of these is the ONLY
+# path by which `import repro` ever reaches repro.models / repro.configs
+# — the sparse path must never pay the model zoo's import cost.
+_WORKLOADS_FACADE = frozenset(
+    {
+        "Workload",
+        "analyze_workload",
+        "moe_dispatch",
+        "pipeline_workload",
+        "serving_pod",
+    }
+)
+
+# facade name → attribute in repro.workloads (renamed where the bare
+# name would be ambiguous at the top level)
+_WORKLOADS_ALIASES = {
+    "analyze_workload": "analyze",
+    "pipeline_workload": "pipeline",
+}
+
+
 def __getattr__(name: str):
     if name in _FACADE:
         from repro import api
@@ -70,8 +93,14 @@ def __getattr__(name: str):
         from repro import cluster
 
         return getattr(cluster, name)
+    if name in _WORKLOADS_FACADE:
+        from repro import workloads
+
+        return getattr(workloads, _WORKLOADS_ALIASES.get(name, name))
     raise AttributeError(f"module 'repro' has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(set(globals()) | _FACADE | _CLUSTER_FACADE)
+    return sorted(
+        set(globals()) | _FACADE | _CLUSTER_FACADE | _WORKLOADS_FACADE
+    )

@@ -22,6 +22,7 @@ so no subsystem re-derives lengths independently.
 """
 from .platform import (
     DeviceMesh,
+    MixedCluster,
     MulticoreCluster,
     Platform,
     Resources,
@@ -42,6 +43,7 @@ from .session import Session
 
 __all__ = [
     "DeviceMesh",
+    "MixedCluster",
     "MulticoreCluster",
     "POLICY_REGISTRY",
     "Platform",

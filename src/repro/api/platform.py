@@ -97,6 +97,17 @@ class Platform:
     def n_nodes(self) -> int:
         return len(self.node_sizes())
 
+    def node_alphas(self) -> Optional[Tuple[float, ...]]:
+        """Per-node speedup exponents, or None when the platform does
+        not distinguish them (the problem's single α applies then).
+        Only genuinely mixed platforms override this."""
+        return None
+
+    def node_speeds(self) -> Tuple[float, ...]:
+        """Per-node work rates relative to the unit the task lengths are
+        expressed in (1.0 everywhere for homogeneous platforms)."""
+        return tuple(1.0 for _ in self.node_sizes())
+
     def resources(self) -> Resources:
         """The typed resource view (compute profile + per-node memory).
 
@@ -307,6 +318,105 @@ class DeviceMesh(Platform):
         return f"mesh[{n if n is not None else '?'}]"
 
 
+class MixedCluster(Platform):
+    """Genuinely heterogeneous nodes: CPU hosts next to accelerator
+    meshes, each with its own speedup exponent and work rate (§6's
+    model with the homogeneity assumptions actually dropped).
+
+    ``MixedCluster([SharedMemory(40), DeviceMesh()], alphas=(0.85,
+    0.95), speeds=(1.0, 4.0))`` — nodes may be Platforms or plain
+    processor counts.  ``speeds`` are relative work rates in the unit
+    the task lengths are expressed in (the ``hetero-mixed`` policy
+    divides work by them); ``alphas`` default to None, meaning the
+    problem's single α applies to every node.
+    """
+
+    name = "mixed"
+
+    def __init__(
+        self,
+        nodes: Sequence,
+        *,
+        alphas: Optional[Sequence[float]] = None,
+        speeds: Optional[Sequence[float]] = None,
+        node_memory: Optional[Union[float, Sequence[float]]] = None,
+    ) -> None:
+        if not nodes:
+            raise ValueError("a mixed cluster needs at least one node")
+        subs: List[Platform] = []
+        for nd in nodes:
+            if isinstance(nd, Platform):
+                subs.append(nd)
+            elif isinstance(nd, (int, float)) and not isinstance(nd, bool):
+                subs.append(SharedMemory(float(nd)))
+            else:
+                raise TypeError(
+                    f"mixed nodes are Platforms or processor counts, got "
+                    f"{type(nd).__name__}"
+                )
+        self._subs = tuple(subs)
+        n = len(self._subs)
+
+        def per_node(vals, what, positive=True):
+            out = tuple(float(v) for v in vals)
+            if len(out) != n:
+                raise ValueError(f"{n} nodes but {len(out)} {what}")
+            if positive and any(v <= 0 for v in out):
+                raise ValueError(f"{what} must be positive")
+            return out
+
+        self._alphas = None if alphas is None else per_node(alphas, "alphas")
+        if self._alphas is not None and any(a > 1.0 for a in self._alphas):
+            raise ValueError("alphas must be in (0, 1]")
+        self._speeds = (
+            tuple(1.0 for _ in self._subs)
+            if speeds is None
+            else per_node(speeds, "speeds")
+        )
+        if node_memory is None:
+            self._memory = tuple(
+                s.resources().total_memory() for s in self._subs
+            )
+        elif isinstance(node_memory, (int, float)):
+            self._memory = tuple(float(node_memory) for _ in self._subs)
+        else:
+            self._memory = per_node(node_memory, "memory capacities")
+
+    def subplatforms(self) -> Tuple[Platform, ...]:
+        return self._subs
+
+    def capacity(self) -> float:
+        return float(sum(s.capacity() for s in self._subs))
+
+    def node_sizes(self) -> Tuple[float, ...]:
+        return tuple(s.capacity() for s in self._subs)
+
+    def node_alphas(self) -> Optional[Tuple[float, ...]]:
+        return self._alphas
+
+    def node_speeds(self) -> Tuple[float, ...]:
+        return self._speeds
+
+    def resources(self) -> Resources:
+        return Resources(compute=self.profile(), memory=self._memory)
+
+    def devices(self) -> Optional[List]:
+        for s in self._subs:
+            devs = s.devices()
+            if devs:
+                return devs
+        return None
+
+    def describe(self) -> str:
+        parts = []
+        for s, sp in zip(self._subs, self._speeds):
+            tag = f"{s.name}:{s.capacity():g}"
+            if sp != 1.0:
+                tag += f"@{sp:g}x"
+            parts.append(tag)
+        return f"mixed[{'+'.join(parts)}]"
+
+
 # ----------------------------------------------------------------------
 def as_platform(obj) -> Platform:
     """Coerce ``obj`` into a Platform.
@@ -333,6 +443,7 @@ def as_platform(obj) -> Platform:
 
 __all__ = [
     "DeviceMesh",
+    "MixedCluster",
     "MulticoreCluster",
     "Platform",
     "Resources",

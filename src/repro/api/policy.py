@@ -412,6 +412,69 @@ class HeteroFPTASPolicy(Policy):
         )
 
 
+@register_policy("hetero-mixed")
+class MixedHeteroPolicy(Policy):
+    """Beyond-paper §6.2: two *genuinely* mixed nodes (per-node α and
+    work rate — a CPU host next to an accelerator mesh).
+
+    Reads the per-node exponents/speeds from the platform
+    (:meth:`~repro.api.platform.Platform.node_alphas` /
+    ``node_speeds``; a platform without per-node exponents falls back
+    to the problem's single α, where the candidates coincide with
+    Algorithm 12's).  Tasks are partitioned by
+    :func:`repro.core.hetero.mixed_hetero_fptas`; like the other
+    placement policies the schedule carries the node assignment in
+    ``meta`` rather than share entries.  Any tree shape is accepted —
+    the partition covers every positive-length task and the reported
+    makespan ignores precedence (it is the independent-task bound §6
+    analyses; for a star problem it is exact).
+    """
+
+    def __init__(self, lam: float = 1.05) -> None:
+        self.lam = float(lam)
+
+    def plan(self, problem: Problem, platform: Platform) -> Schedule:
+        from repro.core.hetero import NodeSpec, mixed_hetero_fptas
+
+        sizes = platform.node_sizes()
+        if len(sizes) != 2:
+            raise ValueError(
+                f"hetero-mixed needs a platform with 2 nodes, got {sizes}"
+            )
+        alphas = platform.node_alphas() or (problem.alpha, problem.alpha)
+        speeds = platform.node_speeds()
+        tree = problem.tree
+        tasks = [i for i in range(tree.n) if tree.lengths[i] > 0]
+        if not tasks:
+            raise ValueError("hetero-mixed needs at least one nonzero task")
+        works = [float(tree.lengths[i]) for i in tasks]
+        node_p = NodeSpec(float(sizes[0]), float(alphas[0]), float(speeds[0]))
+        node_q = NodeSpec(float(sizes[1]), float(alphas[1]), float(speeds[1]))
+        res = mixed_hetero_fptas(works, node_p, node_q, lam=self.lam)
+        on_p = set(res.on_p)
+        placement = sorted(
+            (int(tree.labels[t]), 0 if j in on_p else 1)
+            for j, t in enumerate(tasks)
+        )
+        return Schedule(
+            alpha=problem.alpha,
+            policy=self.name,
+            platform=platform.describe(),
+            capacity=platform.capacity(),
+            entries=[],
+            makespan=float(res.makespan),
+            fluid_makespan=float(res.lower_bound),
+            discretized=False,
+            meta={
+                "placement": placement,
+                "alphas": [node_p.alpha, node_q.alpha],
+                "speeds": [node_p.speed, node_q.speed],
+                "lam": self.lam,
+                "lower_bound": res.lower_bound,
+            },
+        )
+
+
 @register_policy("k-node")
 class KNodePolicy(Policy):
     """Beyond-paper: Lemma-10-style greedy on k homogeneous nodes."""

@@ -39,6 +39,9 @@ class Problem:
     matrix: Optional[object] = None  # the (permuted) sparse matrix symb describes
     footprints: Optional[object] = None  # memory.Footprints override (generic trees)
     provenance: Optional[object] = None  # optimize.Provenance (amalgamated trees)
+    # JSON-serializable provenance of non-sparse problems (the workload
+    # frontend's op map); Session.plan copies it into Schedule.meta
+    meta: Optional[dict] = None
     _eq: Optional[np.ndarray] = field(
         default=None, repr=False, compare=False
     )
@@ -140,6 +143,7 @@ class Problem:
             matrix=self.matrix,
             footprints=self.footprints,
             provenance=self.provenance,
+            meta=self.meta,
         )
 
     # -- constructors ---------------------------------------------------

@@ -82,6 +82,47 @@ class Session:
         self.schedule = None
         return self
 
+    def analyze_workload(
+        self,
+        spec,
+        *,
+        kind: str = "auto",
+        shape=None,
+        stages: int = 4,
+        skew: float = 1.0,
+        alpha: Optional[float] = None,
+        estimator: str = "analytic",
+    ) -> "Session":
+        """Model-zoo workload → malleable task tree (the non-sparse twin
+        of :meth:`analyze`).
+
+        ``spec`` is a config name from :data:`repro.configs.ARCHS`, a
+        ``ModelConfig``, the multifrontal ``SolverConfig`` (or
+        ``"sparse"``), a list of configs (a serving pod), or a built
+        :class:`~repro.workloads.Workload`.  Task lengths come from the
+        platform's calibrated roofline (``estimator="hlo"`` rescales by
+        the measured HLO/analytic flop ratio), α from the platform
+        calibration unless given, and the per-task activation
+        footprints feed the same memory-aware admission the sparse path
+        uses.  The op-provenance meta rides ``Problem → plan() →
+        Schedule JSON``.  Imports the model zoo lazily — sparse-only
+        sessions never load it.
+        """
+        from repro.workloads.zoo import analyze as _analyze_workload
+
+        self.problem = _analyze_workload(
+            spec,
+            self.platform,
+            kind=kind,
+            shape=shape,
+            stages=stages,
+            skew=skew,
+            alpha=alpha,
+            estimator=estimator,
+        )
+        self.schedule = None
+        return self
+
     def load(self, problem, alpha: Optional[float] = None) -> "Session":
         """Set the problem directly (Problem, TaskTree+α, lengths+α)."""
         self.problem = as_problem(problem, alpha)
@@ -176,6 +217,11 @@ class Session:
         if problem.provenance is not None:
             # ship the amalgamation map with the plan (JSON-serializable)
             sched.meta["provenance"] = problem.provenance.to_dict()
+        if problem.meta:
+            # workload op-provenance (and any other problem meta) rides
+            # the schedule into JSON v2; the plan's own keys win
+            for k, v in problem.meta.items():
+                sched.meta.setdefault(k, v)
         self.schedule = sched
         return self
 
@@ -365,6 +411,7 @@ class Session:
         policy: str = "pm",
         admission: str = "fifo",
         max_concurrent: Optional[int] = None,
+        qos_weights: Optional[dict] = None,
         noise=None,
         speedup_floor: bool = False,
         alpha: Optional[float] = None,
@@ -385,6 +432,11 @@ class Session:
         when its minimal peak fits next to the already-admitted trees'
         peaks (delayed otherwise), and a tree that can never fit is
         refused at submission.
+
+        ``qos_weights`` maps tenant id → relative share weight for the
+        ``admission="fair"`` policy (a weight-2 tenant is admitted as if
+        it had consumed half its actual service); tenants without an
+        entry weigh 1.
 
         ``cluster`` switches the backend from the in-process
         virtual-time engine to a scheduler/worker cluster
@@ -461,6 +513,7 @@ class Session:
                 policy=policy,
                 admission=admission,
                 max_concurrent=max_concurrent,
+                qos_weights=qos_weights,
                 memory_budget=memory_budget,
                 time_scale=time_scale,
             )
@@ -471,6 +524,7 @@ class Session:
             policy=policy,
             admission=admission,
             max_concurrent=max_concurrent,
+            weights=qos_weights,
             noise=noise,
             speedup_floor=speedup_floor,
             memory_capacity=self._memory_capacity(memory_budget),
@@ -519,6 +573,7 @@ class Session:
         policy: str,
         admission: str,
         max_concurrent,
+        qos_weights,
         memory_budget,
         time_scale: float,
     ) -> RunReport:
@@ -540,6 +595,7 @@ class Session:
                 policy=policy if policy in ("pm", "proportional") else "pm",
                 admission=admission,
                 max_concurrent=max_concurrent,
+                qos_weights=qos_weights,
                 memory_capacity=self._memory_capacity(memory_budget),
             )
             own = True

@@ -123,6 +123,7 @@ class SimEngine:
         policy: str = "pm",
         admission: str = "fifo",
         max_concurrent: Optional[int] = None,
+        qos_weights=None,
         memory_capacity: Optional[float] = None,
         noise=None,
         speedup_floor: bool = False,
@@ -132,6 +133,7 @@ class SimEngine:
         self.policy = policy
         self.admission = admission
         self.max_concurrent = max_concurrent
+        self.qos_weights = qos_weights
         self.memory_capacity = memory_capacity
         self.noise = noise
         self.speedup_floor = speedup_floor
@@ -164,7 +166,9 @@ class SimEngine:
             self.alpha,
             policy=self.policy,
             noise=self.noise or NoNoise(),
-            admission=AdmissionQueue(self.admission, self.max_concurrent),
+            admission=AdmissionQueue(
+                self.admission, self.max_concurrent, self.qos_weights
+            ),
             memory_capacity=self.memory_capacity,
             speedup_floor=self.speedup_floor,
         )

@@ -208,6 +208,7 @@ class ClusterScheduler:
         policy: str = "pm",
         admission: str = "fifo",
         max_concurrent: Optional[int] = None,
+        qos_weights: Optional[Dict[int, float]] = None,
         memory_capacity: Optional[float] = None,
         heartbeat_timeout: float = 0.25,
         batching: bool = True,
@@ -222,7 +223,7 @@ class ClusterScheduler:
         self.name = name or f"scheduler-{next(_SCHED_SEQ)}"
         self.alpha = alpha
         self.policy = policy
-        self.queue = AdmissionQueue(admission, max_concurrent)
+        self.queue = AdmissionQueue(admission, max_concurrent, qos_weights)
         self.memory_capacity = (
             float(memory_capacity) if memory_capacity else math.inf
         )

@@ -67,16 +67,28 @@ class AdmissionQueue:
     """Pending-tree queue with a pluggable admission policy."""
 
     def __init__(
-        self, policy: str = "fifo", max_concurrent: Optional[int] = None
+        self,
+        policy: str = "fifo",
+        max_concurrent: Optional[int] = None,
+        weights: Optional[Dict[int, float]] = None,
     ) -> None:
         if policy not in POLICIES:
             raise ValueError(f"unknown admission policy {policy!r}")
         if max_concurrent is not None and max_concurrent < 1:
             raise ValueError("max_concurrent must be >= 1")
+        if weights is not None and any(w <= 0 for w in weights.values()):
+            raise ValueError("QoS weights must be positive")
         self.policy = policy
         self.max_concurrent = max_concurrent
+        # tenant → QoS weight for `fair`: service is normalized by the
+        # weight, so a weight-2 tenant is admitted as if it had consumed
+        # half its actual service (weighted fair share); absent ⇒ 1.0
+        self.weights = {int(t): float(w) for t, w in (weights or {}).items()}
         self._pending: List[_Pending] = []
         self._seq = itertools.count()
+
+    def weight(self, tenant: int) -> float:
+        return self.weights.get(int(tenant), 1.0)
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -128,9 +140,9 @@ class AdmissionQueue:
             key = lambda p: (p.seq,)
         elif self.policy == "sjf":
             key = lambda p: (p.eq, p.seq)
-        else:  # fair
+        else:  # fair (weighted: normalized service decides)
             svc = service_by_tenant or {}
-            key = lambda p: (svc.get(p.tenant, 0.0), p.seq)
+            key = lambda p: (svc.get(p.tenant, 0.0) / self.weight(p.tenant), p.seq)
         best = min(fitting, key=lambda j: key(self._pending[j]))
         return self._pending.pop(best)
 
@@ -143,6 +155,7 @@ def serve_trees(
     policy: str = "pm",
     admission: str = "fifo",
     max_concurrent: Optional[int] = None,
+    weights: Optional[Dict[int, float]] = None,
     noise=None,
     speedup_floor: bool = False,
     memory_capacity: Optional[float] = None,
@@ -154,7 +167,8 @@ def serve_trees(
     plans cannot overlap trees (frozen shares of two trees would break
     the §4 resource bound), so ``static`` forces ``max_concurrent=1``.
     ``memory_capacity`` (bytes) makes admission memory-aware: admitted
-    trees' minimal peaks must fit in the pool together.
+    trees' minimal peaks must fit in the pool together.  ``weights``
+    are per-tenant QoS weights for ``admission="fair"``.
     """
     from repro.api.problem import as_problem  # deferred: api ← online
     from .scheduler import OnlineScheduler  # deferred: queue ← scheduler
@@ -167,7 +181,7 @@ def serve_trees(
         policy=policy,
         noise=noise,
         speedup_floor=speedup_floor,
-        admission=AdmissionQueue(admission, max_concurrent),
+        admission=AdmissionQueue(admission, max_concurrent, weights),
         memory_capacity=memory_capacity,
     )
     for req in requests:

@@ -166,6 +166,39 @@ def test_inproc_cluster_serves_multi_tenant_stream(rng):
     assert leaked_threads() == []
 
 
+def test_qos_weights_skew_fair_admission_toward_heavy_tenant():
+    """Weighted fair share end-to-end: with tenant 0 weighing 4x, its
+    backlog is admitted ~4x as often, so its mean wait drops below the
+    equal-weight tenant's on the same one-at-a-time pool."""
+    with LocalCluster(
+        n_workers=1,
+        slots_per_worker=1,
+        admission="fair",
+        max_concurrent=1,
+        qos_weights={0: 4.0, 1: 1.0},
+        **FAST,
+        **HB,
+    ) as cl:
+        client = cl.client()
+        futs = [
+            client.submit(
+                Problem.from_lengths([1.0, 1.0, 1.0], ALPHA),
+                tenant=i % 2,
+                rid=i,
+            )
+            for i in range(8)
+        ]
+        results = client.gather(futs, timeout=60.0)
+        assert all(r.ok for r in results)
+        wait = {
+            t: np.mean([r.wait for r in results if r.tenant == t])
+            for t in (0, 1)
+        }
+        assert wait[0] < wait[1]
+        cl.drain()
+    assert leaked_threads() == []
+
+
 def test_cross_tenant_batching_merges_fronts(rng):
     """Same-shape ready fronts from *different tenants* ride one
     dispatch (continuous batching), and turning batching off forbids

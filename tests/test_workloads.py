@@ -1,0 +1,352 @@
+"""The workload frontend: op-DAG IR, tree-ification, calibrated costs,
+the model-zoo builders, the facade entry point, and the mixed-platform
+two-node FPTAS.  Every config in the zoo must compile into a §4-valid
+malleable task tree and flow through plan/simulate/serve unchanged."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import MixedCluster, Problem, Schedule, Session, SharedMemory
+from repro.configs import ARCHS, SOLVER
+from repro.core.hetero import (
+    NodeSpec,
+    hetero_fptas,
+    mixed_hetero_fptas,
+    mixed_lower_bound,
+    mixed_partition_makespan,
+)
+from repro.workloads import (
+    CALIBRATIONS,
+    Op,
+    OpGraph,
+    Workload,
+    analyze,
+    calibration_for,
+    moe_dispatch,
+    default_workload,
+    pipeline,
+    serving_pod,
+    task_lengths,
+    treeify,
+)
+
+ALPHA = 0.9
+
+
+# ----------------------------------------------------------------------
+# IR + tree-ification
+# ----------------------------------------------------------------------
+def test_opgraph_validates_deps_cycles_and_duplicates():
+    with pytest.raises(ValueError, match="unknown op"):
+        OpGraph([Op("a", deps=("ghost",))])
+    with pytest.raises(ValueError, match="duplicate"):
+        OpGraph([Op("a"), Op("a")])
+    with pytest.raises(ValueError, match="cycle"):
+        OpGraph([Op("a", deps=("b",)), Op("b", deps=("a",))])
+    with pytest.raises(ValueError, match="non-negative"):
+        Op("a", flops=-1.0)
+
+
+def test_series_contraction_fuses_chains_and_conserves_work():
+    g = OpGraph([
+        Op("a", flops=1.0, out_bytes=10.0),
+        Op("b", flops=2.0, deps=("a",), out_bytes=20.0),
+        Op("c", flops=4.0, deps=("b",), out_bytes=40.0),
+    ])
+    tf = treeify(g)
+    # a pure chain contracts to one task carrying the summed work
+    assert tf.n_tasks == 1
+    assert tf.flops[0] == pytest.approx(7.0)
+    assert sorted(tf.op_map[0]) == ["a", "b", "c"]
+    assert tf.relaxed_edges == []
+    # ...whose handoff is the *sink* op's activation, not the chain's sum
+    assert tf.out_bytes[0] == pytest.approx(40.0)
+
+
+def test_group_tags_block_cross_stage_fusion():
+    g = OpGraph([
+        Op("a", flops=1.0, group="s0"),
+        Op("b", flops=2.0, deps=("a",), group="s0"),
+        Op("c", flops=4.0, deps=("b",), group="s1"),
+    ])
+    tf = treeify(g)
+    assert tf.n_tasks == 2  # s0 chain fuses, the stage boundary holds
+    assert sorted(map(sorted, tf.op_map)) == [["a", "b"], ["c"]]
+    # in-tree: s0 feeds s1
+    [s0] = [i for i, ops in enumerate(tf.op_map) if "a" in ops]
+    [s1] = [i for i, ops in enumerate(tf.op_map) if "c" in ops]
+    assert tf.tree.parent[s0] == s1
+
+
+def test_fanout_relaxes_extra_edges_and_records_them():
+    g = OpGraph([
+        Op("src", flops=1.0),
+        Op("l", flops=2.0, deps=("src",)),
+        Op("r", flops=3.0, deps=("src",)),
+        Op("join", flops=1.0, deps=("l", "r")),
+    ])
+    tf = treeify(g)
+    assert tf.n_tasks == 4
+    assert len(tf.relaxed_edges) == 1
+    assert tf.relaxed_edges[0][0] == "src"  # the dropped producer edge
+    # work is conserved exactly across the rewrite
+    assert tf.flops.sum() == pytest.approx(g.total_flops())
+
+
+def test_multiple_sinks_join_under_zero_cost_virtual_root():
+    g = OpGraph([Op("a", flops=1.0), Op("b", flops=2.0)])
+    tf = treeify(g)
+    assert tf.n_tasks == 3
+    root = int(np.flatnonzero(tf.tree.parent == -1)[0])
+    assert tf.op_map[root] == []  # virtual
+    assert tf.flops[root] == 0.0
+    assert tf.flops.sum() == pytest.approx(3.0)
+
+
+def test_meta_block_is_json_serializable_provenance():
+    tf = treeify(OpGraph([Op("a", flops=1.0), Op("b", flops=2.0, deps=("a",))]))
+    meta = json.loads(json.dumps(tf.meta()))
+    assert meta["n_ops"] == 2
+    assert sorted(sum(meta["op_map"].values(), [])) == ["a", "b"]
+
+
+# ----------------------------------------------------------------------
+# Cost model
+# ----------------------------------------------------------------------
+def test_task_lengths_follow_the_roofline():
+    # two independent ops (→ virtual root): one compute-bound, one
+    # bandwidth-bound; each task's length is its binding resource's time
+    tf = treeify(OpGraph([
+        Op("compute", flops=1e12, bytes=1.0),
+        Op("memory", flops=1.0, bytes=1e12),
+    ]))
+    cal = CALIBRATIONS["tpu"]
+    lengths = task_lengths(tf, cal)
+    assert lengths.shape == (tf.n_tasks,)
+    assert lengths[0] == pytest.approx(1e12 / cal.flop_rate)
+    assert lengths[1] == pytest.approx(1e12 / cal.mem_bw)
+    assert lengths[2] == 0.0  # the virtual root costs nothing
+
+
+def test_calibration_for_duck_types_on_platform_name():
+    assert calibration_for(SharedMemory(8)).name == "cpu"
+    mixed = MixedCluster([SharedMemory(4), 2])
+    assert calibration_for(mixed).name in CALIBRATIONS
+
+
+# ----------------------------------------------------------------------
+# Zoo builders: every config compiles to a §4-valid schedule
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_every_zoo_config_plans_valid_under_pm_and_online(name):
+    wl = default_workload(ARCHS[name])
+    assert isinstance(wl, Workload)
+    prob = wl.problem(SharedMemory(16))
+    assert prob.n >= 2
+    assert np.all(np.asarray(prob.tree.lengths) >= 0)
+    assert prob.meta and prob.meta["workload"]["kind"] == wl.kind
+
+    sess = Session(SharedMemory(16)).load(prob)
+    sched = sess.plan(policy="pm").schedule
+    sched.validate(prob)
+    # op-provenance rides the Problem into the Schedule meta
+    assert sched.meta["workload"]["n_ops"] == wl.graph.n_ops
+
+    rep = sess.simulate(policy="pm")
+    assert rep.makespan == pytest.approx(sched.makespan, rel=1e-9)
+
+    # JSON v2 round-trip keeps the provenance block intact
+    back = Schedule.from_json(sched.to_json())
+    assert back.meta["workload"]["op_map"] == sched.meta["workload"]["op_map"]
+    back.validate(prob)
+
+
+def test_moe_dispatch_star_shape_and_skew():
+    cfg = ARCHS["qwen2-moe-a2.7b"]
+    wl = moe_dispatch(cfg, skew=1.0)
+    assert wl.kind == "moe"
+    # star: every expert's parent is the router/backbone root
+    tf = wl.treeified
+    root = int(np.flatnonzero(tf.tree.parent == -1)[0])
+    children = np.flatnonzero(tf.tree.parent == root)
+    assert len(children) == cfg.moe.n_experts
+    # Zipf skew orders the expert loads
+    loads = tf.flops[children]
+    assert loads.max() > loads.min()
+
+
+def test_pipeline_contracts_to_stage_chain():
+    wl = pipeline(ARCHS["qwen3-4b"], stages=4)
+    assert wl.kind == "pipeline"
+    n = wl.treeified.n_tasks
+    assert n <= 4 + 2  # stages (+ embed/head fused at the ends)
+    # a chain has exactly one leaf
+    parents = wl.treeified.tree.parent
+    assert sum(1 for t in range(n) if t not in set(parents.tolist())) == 1
+
+
+def test_serving_pod_namespaces_and_joins_models():
+    pod = serving_pod(["qwen3-4b", "rwkv6-1.6b"])
+    assert pod.kind == "pod"
+    names = [op.name for op in pod.graph.ops]
+    assert all(n.startswith(("m0.", "m1.")) for n in names)
+    prob = pod.problem(SharedMemory(16))
+    root = int(np.flatnonzero(np.asarray(prob.tree.parent) == -1)[0])
+    assert prob.tree.lengths[root] == 0.0  # virtual join
+
+
+def test_analyze_dispatches_models_pods_and_sparse():
+    p = SharedMemory(16)
+    assert analyze("qwen3-4b", p).meta["workload"]["kind"] == "pipeline"
+    assert analyze(["qwen3-4b", "rwkv6-1.6b"], p).meta["workload"]["kind"] == "pod"
+    sp = analyze("sparse", p)
+    assert sp.meta["workload"]["kind"] == "sparse"
+    assert sp.n > 100  # the SOLVER grid's multifrontal tree
+    assert analyze(SOLVER.name, p).n == sp.n
+    with pytest.raises((KeyError, ValueError)):
+        analyze("no-such-model", p)
+
+
+# ----------------------------------------------------------------------
+# Facade: Session.analyze_workload end-to-end
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "name,shape",
+    [
+        ("qwen2-moe-a2.7b", "decode_32k"),
+        ("granite-moe-3b-a800m", "decode_32k"),
+        ("qwen3-4b", "prefill_32k"),
+        ("qwen2.5-3b", "train_4k"),
+        ("rwkv6-1.6b", "decode_32k"),
+        ("starcoder2-7b", "prefill_32k"),
+    ],
+)
+def test_analyze_workload_plans_and_simulates(name, shape):
+    sess = Session(SharedMemory(32)).analyze_workload(name, shape=shape)
+    sched = sess.plan(policy="pm").schedule
+    sched.validate(sess.problem)
+    rep = sess.simulate(policy="pm")
+    assert rep.makespan > 0
+    assert sched.meta["workload"]["model"] == name
+
+
+def test_analyze_workload_memory_footprints_enforced():
+    sess = Session(SharedMemory(32)).analyze_workload(
+        "qwen3-4b", shape="prefill_32k"
+    )
+    assert sess.problem.memory_footprints() is not None
+    sched = sess.plan(policy="pm").schedule
+    assert sched.peak_memory() > 0
+
+
+def test_analyze_workload_serves_in_process():
+    reqs = [("qwen3-4b", 0), ("rwkv6-1.6b", 1), ("qwen3-4b", 0)]
+    sess = Session(SharedMemory(32))
+    stream = [
+        (analyze(n, SharedMemory(32)), 0.0, t) for n, t in reqs
+    ]
+    rep = sess.serve(
+        stream, admission="fair", max_concurrent=2,
+        qos_weights={0: 4.0, 1: 1.0},
+    )
+    online = rep.detail
+    assert len(online.futures) == 3
+    assert all(f.state == "done" for f in online.futures.values())
+    assert rep.metrics["mean_latency"] > 0
+
+
+def test_hlo_estimator_rescales_analytic_lengths():
+    wl = pipeline(ARCHS["qwen3-4b"])
+    a = wl.problem(SharedMemory(8), estimator="analytic")
+    h = wl.problem(SharedMemory(8), estimator="hlo")
+    ra = np.asarray(a.tree.lengths)
+    rh = np.asarray(h.tree.lengths)
+    mask = ra > 0
+    scale = rh[mask] / ra[mask]
+    # one global XLA-vs-analytic flop scale, applied uniformly
+    assert scale.std() / scale.mean() < 1e-6
+    assert 0.1 < scale.mean() < 10.0
+
+
+# ----------------------------------------------------------------------
+# Mixed-platform two-node FPTAS (§6.2 generalized)
+# ----------------------------------------------------------------------
+def test_mixed_fptas_matches_homogeneous_algorithm_12(rng):
+    works = rng.uniform(0.5, 5.0, 24)
+    node_p = NodeSpec(6.0, ALPHA)
+    node_q = NodeSpec(3.0, ALPHA)
+    res = mixed_hetero_fptas(works, node_p, node_q, lam=1.05)
+    legacy = hetero_fptas(works, 6.0, 3.0, ALPHA, lam=1.05)
+    # same α, unit speeds: the mixed result can only match or beat the
+    # legacy bound since it scores every candidate exactly
+    assert res.makespan <= legacy.makespan * 1.05 + 1e-12
+    assert res.makespan >= res.lower_bound - 1e-9
+    # the partition is a partition
+    assert sorted(res.on_p + res.on_q) == list(range(24))
+    assert res.makespan == pytest.approx(
+        mixed_partition_makespan(works, res.on_p, node_p, node_q)
+    )
+
+
+def test_mixed_fptas_prefers_fast_node_for_everything_small(rng):
+    works = rng.uniform(0.5, 1.0, 8)
+    slow = NodeSpec(4.0, 0.85, speed=1.0)
+    fast = NodeSpec(4.0, 0.95, speed=100.0)
+    res = mixed_hetero_fptas(works, slow, fast, lam=1.05)
+    assert len(res.on_q) >= len(res.on_p)  # bulk lands on the fast node
+    assert res.makespan >= mixed_lower_bound(works, slow, fast) - 1e-9
+
+
+def test_mixed_cluster_policy_end_to_end(rng):
+    works = rng.uniform(0.5, 3.0, 16)
+    platform = MixedCluster(
+        [SharedMemory(40), 8], alphas=(0.85, 0.95), speeds=(1.0, 4.0)
+    )
+    prob = Problem.from_lengths(works, 0.9)
+    sched = Session(platform).load(prob).plan(policy="hetero-mixed").schedule
+    assert sched.makespan >= sched.fluid_makespan - 1e-9
+    placed = {lbl for lbl, _ in sched.meta["placement"]}
+    assert len(placed) == 16
+    assert set(n for _, n in sched.meta["placement"]) <= {0, 1}
+
+
+def test_mixed_cluster_validates_construction():
+    with pytest.raises(ValueError):
+        MixedCluster([4, 4], alphas=(0.9, 1.5))  # α out of (0, 1]
+    with pytest.raises(ValueError):
+        MixedCluster([4, 4], speeds=(1.0, -2.0))
+    # the policy needs exactly two nodes to run Algorithm 12 on
+    one = MixedCluster([SharedMemory(4)])
+    with pytest.raises(ValueError):
+        Session(one).load(Problem.from_lengths([1.0, 2.0], 0.9)).plan(
+            policy="hetero-mixed"
+        )
+
+
+# ----------------------------------------------------------------------
+# Laziness: the facade must not drag the zoo into light-weight sessions
+# ----------------------------------------------------------------------
+def test_plain_session_never_imports_the_model_zoo():
+    code = (
+        "import sys\n"
+        "from repro import Session, SharedMemory\n"
+        "from repro.sparse import grid_laplacian_2d, nested_dissection_2d\n"
+        "from repro.api import Problem\n"
+        "a = grid_laplacian_2d(9)\n"
+        "prob = Problem.from_matrix(a, 0.9, ordering=nested_dissection_2d(9))\n"
+        "s = Session(SharedMemory(8)).load(prob).plan('pm')\n"
+        "s.simulate()\n"
+        "heavy = [m for m in sys.modules if m.startswith(\n"
+        "    ('repro.workloads', 'repro.models', 'repro.configs'))]\n"
+        "assert not heavy, heavy\n"
+        "print('lazy-ok')\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=120,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "lazy-ok" in out.stdout
